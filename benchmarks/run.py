@@ -1,0 +1,153 @@
+"""Benchmark runner — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Default = quick mode (a few
+thread counts, short virtual-time budgets, headline locks); ``--full``
+sweeps the paper's full grids.  ``--live`` re-runs on real threads.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--live] [--only fig4]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import figures as F
+from .common import PAPER_LOCK_NAMES, QUICK_THREADS
+
+HEADLINE = ("ba", "bravo-ba", "pthread", "bravo-pthread", "percpu",
+            "cohort-rw")
+QUICK_LOCKS = ("ba", "bravo-ba", "percpu")
+
+RESULTS = []
+
+
+def emit(res) -> None:
+    RESULTS.append(res)
+    print(res.row(), flush=True)
+
+
+def fig1(full: bool, live: bool) -> None:
+    pool_sizes = (1, 16, 256, 4096) if not full else \
+        (1, 4, 16, 64, 256, 1024, 4096, 8192)
+    for n_locks in pool_sizes:
+        shared = F.interference(n_locks, nthreads=16, shared=True, live=live)
+        private = F.interference(n_locks, nthreads=16, shared=False,
+                                 live=live)
+        ratio = shared.ops_per_ms / max(private.ops_per_ms, 1e-9)
+        shared.extras["ratio_vs_private"] = ratio
+        emit(shared)
+
+
+def fig2(full: bool, live: bool) -> None:
+    threads = (2, 8, 32) if not full else (1, 2, 4, 8, 16, 32, 64)
+    for lock in (HEADLINE if full else QUICK_LOCKS):
+        for t in threads:
+            emit(F.alternator(lock, t, rounds=200 if not full else 500,
+                              live=live))
+
+
+def fig3(full: bool, live: bool) -> None:
+    readers = (4, 16, 63) if not full else (1, 2, 4, 8, 16, 32, 63)
+    for lock in (HEADLINE if full else QUICK_LOCKS + ("cohort-rw",)):
+        for r in readers:
+            emit(F.test_rwlock(lock, r, live=live))
+
+
+def fig4(full: bool, live: bool) -> None:
+    ps = (0.9, 0.01, 0.0001) if not full else \
+        (0.9, 0.5, 0.1, 0.01, 0.001, 0.0001)
+    threads = (4, 16, 48) if not full else (1, 2, 4, 8, 16, 32, 64)
+    for p in ps:
+        for lock in (HEADLINE if full else QUICK_LOCKS):
+            for t in threads:
+                emit(F.rwbench(lock, t, p, live=live))
+
+
+def fig5(full: bool, live: bool) -> None:
+    readers = (4, 16, 48) if not full else (1, 2, 4, 8, 16, 32, 63)
+    # two write cadences: ~15us/Put (hot; shows BRAVO's revocation-flap
+    # regime) and ~150us/Put (rocksdb-realistic; BRAVO wins)
+    for ww in (4000, 40000):
+        for lock in (HEADLINE if full else QUICK_LOCKS):
+            for r in readers:
+                emit(F.kv_readwhilewriting(lock, r, live=live,
+                                           write_work=ww))
+
+
+def fig6(full: bool, live: bool) -> None:
+    readers = (4, 16, 46) if not full else (1, 2, 4, 8, 16, 32, 62)
+    for lock in (HEADLINE if full else QUICK_LOCKS):
+        for r in readers:
+            emit(F.hash_table_bench(lock, r, live=live))
+
+
+def fig7(full: bool, live: bool) -> None:
+    readers = (4, 16, 48) if not full else (1, 2, 4, 8, 16, 32, 63)
+    for lock in ("ba", "bravo-ba"):
+        for r in readers:
+            emit(F.locktorture(lock, r, writers=1, read_hold_ns=5000,
+                               write_hold_ns=1000, live=live))
+
+
+def fig8(full: bool, live: bool) -> None:
+    readers = (4, 16, 64) if not full else (1, 2, 4, 8, 16, 32, 64)
+    for lock in ("ba", "bravo-ba"):
+        for r in readers:
+            emit(F.locktorture(lock, r, writers=0, read_hold_ns=5000,
+                               write_hold_ns=0, live=live))
+
+
+def metis(full: bool, live: bool) -> None:
+    threads = (4, 16, 48) if not full else (1, 2, 4, 8, 16, 32, 64)
+    for p in (0.02, 0.3):           # wc/page_fault-like vs mmap-like
+        for lock in ("ba", "bravo-ba"):
+            for t in threads:
+                emit(F.metis_analogue(lock, t, p, live=live))
+
+
+def roofline(full: bool, live: bool) -> None:
+    """Summarize the dry-run roofline table (deliverable (g))."""
+    rd = Path(__file__).resolve().parents[1] / "reports" / "dryrun"
+    if not rd.exists():
+        print("roofline,skipped,run repro.launch.dryrun first", flush=True)
+        return
+    for f in sorted(rd.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        print(f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']},"
+              f"{r['step_time']*1e6:.1f},"
+              f"bottleneck={r['bottleneck']};mfu={r['mfu']:.4f};"
+              f"t_comp={r['t_compute']:.4f};t_mem={r['t_memory']:.4f};"
+              f"t_coll={r['t_collective']:.4f}", flush=True)
+
+
+ALL = {"fig1": fig1, "fig2": fig2, "fig3": fig3, "fig4": fig4,
+       "fig5": fig5, "fig6": fig6, "fig7": fig7, "fig8": fig8,
+       "metis": metis, "roofline": roofline}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--live", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in ALL.items():
+        if args.only and args.only not in name:
+            continue
+        fn(args.full, args.live)
+    if args.json_out:
+        import dataclasses
+        Path(args.json_out).write_text(json.dumps(
+            [dataclasses.asdict(r) for r in RESULTS], indent=1))
+
+
+if __name__ == "__main__":
+    main()

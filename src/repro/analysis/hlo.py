@@ -1,0 +1,222 @@
+"""Trip-count-aware HLO accounting.
+
+XLA's ``HloCostAnalysis`` visits ``while`` bodies once, so for scanned layer
+stacks both FLOPs and collective bytes must be scaled by loop trip counts.
+This module parses optimized (post-SPMD, per-device) HLO text and computes:
+
+* ``collective_bytes``: operand bytes of every all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, x loop trips.
+* ``dot_flops``: 2*M*N*K for every dot/convolution, x loop trips.
+* ``traffic_bytes``: sum over instructions of (operand + output) bytes — an
+  HBM-traffic estimate at fusion boundaries, x loop trips.
+
+Trip counts come from the canonical XLA counted-loop pattern: the while
+condition computation compares the induction variable against an integer
+constant it defines.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1,
+    "u4": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OP_RE = re.compile(r"(?:^|\s)([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|\{)")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(text: str) -> int:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class CompStats:
+    collective_bytes: Dict[str, int] = field(default_factory=dict)
+    dot_flops: int = 0
+    traffic_bytes: int = 0
+    whiles: List[Tuple[str, str]] = field(default_factory=list)
+    max_const: int = 0
+
+
+@dataclass
+class HloReport:
+    collective_bytes: Dict[str, int]
+    total_collective_bytes: int
+    dot_flops: int
+    traffic_bytes: int
+
+
+_SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                 "bitcast", "while", "conditional", "call", "iota",
+                 "after-all", "partition-id", "replica-id"}
+
+# Ops a TPU backend fuses into producers/consumers: we charge no HBM traffic
+# for their intermediates (the CPU backend we compile on leaves them
+# unfused, so charging them would overstate TPU HBM traffic ~10x).
+_FUSIBLE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "negate",
+    "abs", "sign", "tanh", "rsqrt", "sqrt", "cbrt", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "convert", "broadcast",
+    "select", "compare", "and", "or", "xor", "not", "clamp", "is-finite",
+    "cosine", "sine", "atan2", "reverse", "real", "imag", "reshape", "copy",
+    "expm1", "logistic", "erf", "tan", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "remainder", "pad", "map", "reduce-precision",
+}
+# materialization points: charge output bytes; these also read their inputs
+_READS_OPERANDS = {"dot", "convolution", "dynamic-update-slice", "scatter",
+                   "gather", "dynamic-slice", "slice", "concatenate",
+                   "transpose", "reduce", "reduce-window", "sort", "fusion",
+                   "select-and-scatter", "cholesky", "triangular-solve"}
+
+
+def parse_hlo(text: str) -> HloReport:
+    comps: Dict[str, CompStats] = {}
+    shapes: Dict[str, str] = {}
+    cur: Optional[str] = None
+    cur_stats = CompStats()
+    entry_name = None
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line or line.lstrip().startswith(("//", "#")):
+            continue
+        nm = _NAME_RE.match(line)
+        if nm is None:
+            # possibly a computation header: "%name (args) -> shape {"
+            if line.endswith("{") and not line.lstrip().startswith("}"):
+                mc = _COMP_RE.match(line.strip())
+                if mc:
+                    cur = mc.group(2)
+                    comps[cur] = cur_stats = CompStats()
+                    if mc.group(1):
+                        entry_name = cur
+            continue
+        name = nm.group(1)
+        rest = line[nm.end():]
+        mo = _OP_RE.search(rest)
+        if mo is None:
+            continue
+        op = mo.group(1)
+        shape_str = rest[:mo.start()]
+        if cur is None:
+            continue
+        if line.strip().endswith("{"):
+            # "%name = (...) -> ... {" — actually a computation header
+            cur = name
+            comps[cur] = cur_stats = CompStats()
+            continue
+        shapes[name] = shape_str
+        out_b = _shape_bytes(shape_str)
+        # operand bytes: %refs appearing after the op token
+        op_b = 0
+        args = re.findall(r"%([\w.\-]+)", rest[mo.end():])
+        arg_shapes = [shapes[a] for a in args if a in shapes]
+        for s in arg_shapes:
+            op_b += _shape_bytes(s)
+        if op not in _SKIP_TRAFFIC and op not in _FUSIBLE:
+            if op == "dynamic-slice" or op == "gather":
+                t = 2 * out_b                   # read slice + write result
+            elif op == "dynamic-update-slice" or op == "scatter":
+                # in-place on TPU: traffic ~ 2x the update operand
+                upd = _shape_bytes(arg_shapes[1]) if len(arg_shapes) > 1 \
+                    else out_b
+                t = 2 * upd
+            elif op in _READS_OPERANDS or op.startswith(_COLLECTIVES):
+                t = out_b + op_b
+            else:
+                t = out_b
+            cur_stats.traffic_bytes += t
+        base = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if base is not None and not op.endswith("-done"):
+            cur_stats.collective_bytes[base] = \
+                cur_stats.collective_bytes.get(base, 0) + max(op_b, out_b)
+        if op in ("dot", "convolution"):
+            out_elems = _shape_elems(shape_str)
+            k = 1
+            cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+            if cd and arg_shapes:
+                lm = _SHAPE_RE.search(arg_shapes[0])
+                if lm:
+                    dims = [int(d) for d in lm.group(2).split(",") if d]
+                    for ci in cd.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            k *= dims[int(ci)]
+            if op == "convolution":
+                # window elements * input features
+                win = re.search(r"window=\{size=([\dx]+)", rest)
+                if win:
+                    for d in win.group(1).split("x"):
+                        k *= int(d)
+                lm = _SHAPE_RE.search(arg_shapes[1]) if len(arg_shapes) > 1 \
+                    else None
+            cur_stats.dot_flops += 2 * out_elems * k
+        if op == "while":
+            cond = re.search(r"condition=%?([\w.\-]+)", rest)
+            body = re.search(r"body=%?([\w.\-]+)", rest)
+            if cond and body:
+                cur_stats.whiles.append((cond.group(1), body.group(1)))
+        mc2 = _CONST_RE.search(rest)
+        if op == "constant" and mc2:
+            cur_stats.max_const = max(cur_stats.max_const, int(mc2.group(1)))
+
+    memo: Dict[str, Tuple[Dict[str, int], int, int]] = {}
+
+    def total(comp: str, depth=0):
+        if comp in memo:
+            return memo[comp]
+        if depth > 64 or comp not in comps:
+            return ({}, 0, 0)
+        st = comps[comp]
+        coll = dict(st.collective_bytes)
+        flops = st.dot_flops
+        traffic = st.traffic_bytes
+        for cond, body in st.whiles:
+            trips = max(comps.get(cond, CompStats()).max_const, 1)
+            bc, bf, bt = total(body, depth + 1)
+            for k, v in bc.items():
+                coll[k] = coll.get(k, 0) + trips * v
+            flops += trips * bf
+            traffic += trips * bt
+        memo[comp] = (coll, flops, traffic)
+        return memo[comp]
+
+    if entry_name is None and comps:
+        entry_name = next(iter(comps))
+    coll, flops, traffic = total(entry_name) if entry_name else ({}, 0, 0)
+    return HloReport(collective_bytes=coll,
+                     total_collective_bytes=sum(coll.values()),
+                     dot_flops=flops, traffic_bytes=traffic)

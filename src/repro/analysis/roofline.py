@@ -1,0 +1,183 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+  compute    = HLO_FLOPs / (chips * 197 TFLOP/s bf16)
+  memory     = HLO_bytes / (chips * 819 GB/s HBM)
+  collective = collective_bytes / (chips * 50 GB/s/link ICI)
+
+FLOPs/bytes come from our trip-count-aware HLO parser (XLA's cost_analysis
+counts `while` bodies once; we report both and use the parser numbers).
+The parsed module is post-SPMD, i.e. per-device: parser numbers are
+per-chip, so terms divide by per-chip peaks directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+from .hlo import HloReport, parse_hlo
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s/link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float             # HLO-parsed (unfused UPPER BOUND:
+    #                                   compiled on the CPU backend, which
+    #                                   fuses far less than TPU)
+    collective_bytes_per_chip: float
+    collective_breakdown: Dict[str, float]
+    xla_flops: float                  # raw cost_analysis (while-body-once)
+    xla_bytes: float
+    model_flops: float                # 6*N*D (active N for MoE)
+    memory_per_chip_gb: float = 0.0
+    analytic_bytes_per_chip: float = 0.0   # TPU-fusion memory model (below)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        """Memory term from the analytic TPU model (falls back to the parsed
+        upper bound when the model was not supplied)."""
+        b = self.analytic_bytes_per_chip or self.bytes_per_chip
+        return b / HBM_BW
+
+    @property
+    def t_memory_upper(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def step_time(self) -> float:
+        """Ideal-overlap roofline step time = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def usefulness(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global)."""
+        tot = self.flops_per_chip * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-flops utilization at the roofline step time."""
+        denom = self.step_time * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_memory_upper=self.t_memory_upper,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 step_time=self.step_time, usefulness=self.usefulness,
+                 mfu=self.mfu)
+        return d
+
+
+def build_roofline(*, arch: str, shape: str, mesh_name: str, chips: int,
+                   hlo_text: str, cost: Dict[str, float],
+                   model_flops: float,
+                   memory_per_chip_gb: float = 0.0,
+                   analytic_bytes_per_chip: float = 0.0) -> Roofline:
+    rep: HloReport = parse_hlo(hlo_text)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=float(rep.dot_flops),
+        bytes_per_chip=float(rep.traffic_bytes),
+        collective_bytes_per_chip=float(rep.total_collective_bytes),
+        collective_breakdown={k: float(v)
+                              for k, v in rep.collective_bytes.items()},
+        xla_flops=float(cost.get("flops", 0.0)),
+        xla_bytes=float(cost.get("bytes accessed", 0.0)),
+        model_flops=float(model_flops),
+        memory_per_chip_gb=memory_per_chip_gb,
+        analytic_bytes_per_chip=float(analytic_bytes_per_chip),
+    )
+
+
+def analytic_memory_bytes(cfg, kind: str, seq_len: int, global_batch: int, *,
+                          dp: int, tp: int, micro: int,
+                          param_bytes: int, opt_state_bytes: int,
+                          cache_bytes_per_chip: float = 0.0,
+                          collective_bytes_per_chip: float = 0.0,
+                          remat_full: bool = True) -> float:
+    """TPU HBM-traffic model per chip per step.
+
+    The compiled-HLO parse is an *upper bound* (the CPU backend we compile
+    on fuses far less than TPU would); this model assumes TPU-typical
+    fusion:
+
+    * weights: FSDP-gathered working set written + read fwd/bwd (+recompute)
+    * gradients: fp32 accumulator read+write per microbatch (sharded)
+    * optimizer: m/v/p read+write once per step (sharded)
+    * activations: ~10 d-wide + ~3 ff-wide materializations per token-layer,
+      x(fwd + bwd + recompute) for training; flash-attention score blocks
+      stay in VMEM (no HBM term)
+    * logits/embeds, KV-cache traffic, 2x collective payload (HBM in/out
+      around ICI transfers)
+    """
+    n = cfg.num_params()
+    na = cfg.num_active_params()
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    ff = cfg.d_ff
+    if cfg.moe_experts:
+        moe_ff = (cfg.moe_d_ff or cfg.d_ff)
+        ff_tok = ((cfg.moe_top_k + (1 if cfg.moe_shared_expert else 0))
+                  * moe_ff + ff * (cfg.moe_every - 1)) / cfg.moe_every
+    else:
+        ff_tok = ff
+    act_tok_layer = (10 * d + 3 * ff_tok) * 2          # bf16 activations
+    coll_io = 2.0 * collective_bytes_per_chip
+
+    if kind == "train":
+        tokens_loc = seq_len * global_batch / dp
+        weights_io = micro * 4.0 * n * param_bytes / tp
+        grads_io = micro * 2.0 * n * 4 / (dp * tp)
+        opt_io = (2.0 * n * (2 * opt_state_bytes + param_bytes)
+                  + n * 4) / (dp * tp)
+        act_io = tokens_loc * L * act_tok_layer * (2.5 if remat_full else 2.0)
+        logits_io = tokens_loc * (V / tp) * 2 * 3
+        embed_io = tokens_loc * d * 2 * 3
+        return (weights_io + grads_io + opt_io + act_io + logits_io
+                + embed_io + coll_io)
+    if kind == "prefill":
+        tokens_loc = seq_len * global_batch / dp
+        weights_io = 2.0 * n * param_bytes / tp
+        act_io = tokens_loc * L * act_tok_layer
+        return weights_io + act_io + cache_bytes_per_chip + coll_io
+    # decode: weights read once (active params), cache read + tiny write
+    weights_io = na * param_bytes / tp
+    act_io = (global_batch / dp) * L * act_tok_layer
+    return weights_io + cache_bytes_per_chip + act_io + coll_io
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int,
+                    global_batch: int) -> float:
+    """6*N*D for training, 2*N*D for a forward/prefill, 2*N per decoded
+    token (D = tokens processed)."""
+    n_active = cfg.num_active_params()
+    if shape_kind == "train":
+        return 6.0 * n_active * seq_len * global_batch
+    if shape_kind == "prefill":
+        return 2.0 * n_active * seq_len * global_batch
+    # decode: one token per sequence
+    return 2.0 * n_active * global_batch

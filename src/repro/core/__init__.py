@@ -1,0 +1,22 @@
+# The paper's primary contribution: the BRAVO reader-writer-lock
+# transformation (host substrate), the underlying-lock zoo it is evaluated
+# against, the deterministic coherence simulator used to reproduce the
+# paper's scalability figures, and the TPU-native device-side analogue.
+
+from .atomics import Cell, LiveMem, Mem, MemStats
+from .bravo import BRAVO, DEFAULT_N, BravoStats
+from .factory import ALL_LOCK_NAMES, PAPER_LOCK_NAMES, LockEnv
+from .rwlocks import (CentralCounterRWLock, CohortRWLock, PerCPULock, PFQLock,
+                      PFTLock, RWLock)
+from .sim import CoherenceParams, SimDeadlock, SimMem, Topology
+from .table import DEFAULT_TABLE_SIZE, VisibleReadersTable, mix_hash
+
+__all__ = [
+    "Cell", "LiveMem", "Mem", "MemStats",
+    "BRAVO", "DEFAULT_N", "BravoStats",
+    "ALL_LOCK_NAMES", "PAPER_LOCK_NAMES", "LockEnv",
+    "CentralCounterRWLock", "CohortRWLock", "PerCPULock", "PFQLock",
+    "PFTLock", "RWLock",
+    "CoherenceParams", "SimDeadlock", "SimMem", "Topology",
+    "DEFAULT_TABLE_SIZE", "VisibleReadersTable", "mix_hash",
+]

@@ -1,0 +1,136 @@
+"""Device-side BRAVO: the TPU-native distributed read-lease table.
+
+DESIGN.md §2(3): on TPU the analogue of BRAVO's visible-readers table is a
+lease table **sharded across devices**.  Readers (per-device serving steps)
+publish leases into their *local* table shard — zero ICI traffic, the
+analogue of CASing a private cache line.  The rare writer (weight hot-swap /
+cache compaction / elastic reconfiguration) clears a replicated ``rbias``
+flag, then revokes: all-gather the shards and run the Pallas
+``revocation_scan`` kernel (the paper's SIMD-scan future work on the VPU),
+waiting until no shard publishes the lock.
+
+Host-side orchestration (the ``ModelStore`` in the serving engine) drives
+this with ordinary BRAVO logic — RBias / InhibitUntil / the N=9 bound —
+while the table state and scans live on device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as K
+from .bravo import DEFAULT_N
+from .table import mix_hash
+
+TABLE_SLOTS = 4096
+
+
+@dataclasses.dataclass
+class DeviceLeaseState:
+    """Pure functional state: pass through acquire/release/revoke."""
+    table: jax.Array          # (rows, 128) int32
+    rbias: jax.Array          # () int32
+    inhibit_until_ns: int     # host clock (ns)
+
+
+def init_state(slots: int = TABLE_SLOTS) -> DeviceLeaseState:
+    return DeviceLeaseState(
+        table=jnp.zeros((slots // K.LANES, K.LANES), jnp.int32),
+        rbias=jnp.ones((), jnp.int32),
+        inhibit_until_ns=0,
+    )
+
+
+def slots_for(lock_id: int, reader_ids: np.ndarray,
+              slots: int = TABLE_SLOTS) -> np.ndarray:
+    return np.array([mix_hash(lock_id, int(r)) & (slots - 1)
+                     for r in reader_ids], np.int32)
+
+
+def acquire(state: DeviceLeaseState, lock_id: int,
+            reader_ids: np.ndarray) -> Tuple[DeviceLeaseState, np.ndarray]:
+    """Fast-path batch acquire: publish leases for ``reader_ids``.
+
+    Returns the granted mask; callers fall back to the slow path (the host
+    lock on the underlying structure) for readers whose CAS failed or when
+    rbias is clear — exactly Listing 1's control flow, batched."""
+    if int(state.rbias) == 0:
+        return state, np.zeros((len(reader_ids),), bool)
+    sl = jnp.asarray(slots_for(lock_id, reader_ids))
+    ids = jnp.full((len(reader_ids),), lock_id, jnp.int32)
+    table, granted = K.publish(state.table, sl, ids)
+    # recheck rbias after publishing (Listing 1 line 18)
+    if int(state.rbias) == 0:
+        table = K.clear(table, sl)
+        granted = jnp.zeros_like(granted)
+    return dataclasses.replace(state, table=table), np.asarray(granted)
+
+
+def release(state: DeviceLeaseState, lock_id: int,
+            reader_ids: np.ndarray) -> DeviceLeaseState:
+    sl = jnp.asarray(slots_for(lock_id, reader_ids))
+    return dataclasses.replace(state, table=K.clear(state.table, sl))
+
+
+def revoke(state: DeviceLeaseState, lock_id: int, *,
+           n: int = DEFAULT_N,
+           wait_poll_s: float = 0.0005,
+           max_wait_s: float = 5.0) -> Tuple[DeviceLeaseState, int]:
+    """Writer-side revocation: clear rbias, scan, wait for leases to drain.
+
+    Returns (state', scan_count) and sets InhibitUntil per the primum-non-
+    nocere policy.  The scans use the Pallas kernel; waiting polls the scan
+    (fast-path readers clear their own slots on release)."""
+    state = dataclasses.replace(state, rbias=jnp.zeros((), jnp.int32))
+    start = time.monotonic_ns()
+    scans = 0
+    deadline = time.monotonic() + max_wait_s
+    while True:
+        _, count = K.revocation_scan(state.table, lock_id)
+        scans += 1
+        if int(count) == 0:
+            break
+        if time.monotonic() > deadline:
+            raise TimeoutError(f"lease revocation stuck: {int(count)} held")
+        time.sleep(wait_poll_s)
+    now = time.monotonic_ns()
+    state.inhibit_until_ns = now + (now - start) * n
+    return state, scans
+
+
+def rearm(state: DeviceLeaseState) -> DeviceLeaseState:
+    """Slow-path re-arm (only while holding the underlying write exclusion,
+    mirroring Listing 1 lines 25-26)."""
+    if time.monotonic_ns() >= state.inhibit_until_ns:
+        return dataclasses.replace(state, rbias=jnp.ones((), jnp.int32))
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Multi-device revocation (dry-run/demo of the collective pattern)
+# ---------------------------------------------------------------------------
+
+
+def make_distributed_revoke(mesh, axis: str = "data"):
+    """Each device holds a table shard; the writer all-gathers the shards
+    and scans.  Returns a jitted fn (sharded_table, lock_id) -> count."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def rev(table_sharded, lock_id):
+        def body(shard, lid):
+            full = jax.lax.all_gather(shard, axis, axis=0, tiled=True)
+            m = (full == lid).astype(jnp.int32)
+            return jnp.sum(m)
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis, None), P()), out_specs=P(),
+            check_vma=False)(table_sharded, lock_id)
+
+    return jax.jit(rev)

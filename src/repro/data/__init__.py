@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, ShardIndex, SyntheticLM, make_batches
+
+__all__ = ["DataConfig", "ShardIndex", "SyntheticLM", "make_batches"]

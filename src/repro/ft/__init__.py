@@ -1,0 +1,9 @@
+from .checkpoint import (CheckpointManager, load_checkpoint, save_checkpoint)
+from .compression import compress_grads_int8, decompress_grads_int8, \
+    make_compressed_psum
+from .elastic import reshard_tree
+from .straggler import StragglerDetector
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint",
+           "compress_grads_int8", "decompress_grads_int8",
+           "make_compressed_psum", "reshard_tree", "StragglerDetector"]

@@ -1,0 +1,37 @@
+"""Elastic scaling: reshard a checkpointed train state onto a new mesh.
+
+Checkpoints store full (unsharded) arrays, so resharding is device_put with
+the new mesh's NamedShardings; the interesting parts are (a) re-deriving
+the microbatching so the global batch is preserved when DP width changes,
+and (b) the shard-index rebalance in the data pipeline (writer path of the
+BRAVO-guarded index).  tests/test_ft.py round-trips 8 -> 4 -> 8 devices.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from ..dist.sharding import MeshRules, param_specs
+
+
+def reshard_tree(tree: Any, tree_shape: Any, rules: MeshRules, mesh: Mesh,
+                 decode: bool = False) -> Any:
+    """Place a host (numpy) tree onto ``mesh`` with the rule-derived specs."""
+    specs = param_specs(tree_shape, rules, mesh, decode=decode)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), tree, specs)
+
+
+def remicrobatch(global_batch: int, dp: int, target_tokens: int,
+                 seq_len: int) -> int:
+    """Pick microbatch count for a new DP width (elastic restarts)."""
+    tokens_per_dp = global_batch * seq_len // dp
+    micro = max(1, tokens_per_dp // target_tokens)
+    while global_batch % micro != 0 or (global_batch // micro) % dp != 0:
+        micro -= 1
+        if micro <= 1:
+            return 1
+    return micro

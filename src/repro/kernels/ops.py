@@ -1,0 +1,47 @@
+"""Public jit'd wrappers for the table kernels.
+
+On CPU hosts the kernels run in ``interpret=True`` mode (the Pallas body
+executes in Python — the validation path mandated for this container); on
+TPU they compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .table_publish import _publish_call
+from .table_scan import LANES, _scan_call
+
+__all__ = ["as_table2d", "revocation_scan", "publish", "clear", "LANES"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def as_table2d(table_flat: jax.Array) -> jax.Array:
+    n = table_flat.shape[0]
+    assert n % LANES == 0, n
+    return table_flat.reshape(n // LANES, LANES)
+
+
+def revocation_scan(table2d: jax.Array, lock_id) -> tuple[jax.Array,
+                                                          jax.Array]:
+    """VPU scan for a revoking writer: -> (match mask int8, match count)."""
+    return _scan_call(table2d, jnp.asarray(lock_id, table2d.dtype),
+                      interpret=_interpret())
+
+
+def publish(table2d: jax.Array, slots: jax.Array, ids: jax.Array):
+    """Batched CAS(0 -> id): -> (new table, granted bool (M,))."""
+    return _publish_call(table2d, slots, ids, interpret=_interpret(),
+                         unconditional=False)
+
+
+def clear(table2d: jax.Array, slots: jax.Array) -> jax.Array:
+    """Release: store 0 into each slot."""
+    zeros = jnp.zeros_like(slots)
+    out, _ = _publish_call(table2d, slots, zeros, interpret=_interpret(),
+                           unconditional=True)
+    return out

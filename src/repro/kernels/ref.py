@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the table kernels (used by the allclose test sweeps
+and as the CPU fallback path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_ref(table2d: jax.Array, lock_id) -> tuple[jax.Array, jax.Array]:
+    """-> (mask int8 (rows,128), count int32 scalar)."""
+    m = table2d == jnp.asarray(lock_id, table2d.dtype)
+    return m.astype(jnp.int8), jnp.sum(m.astype(jnp.int32))
+
+
+def publish_ref(table2d: jax.Array, slots: jax.Array, ids: jax.Array,
+                unconditional: bool = False):
+    """Sequential-CAS semantics: the first request for a free slot wins.
+
+    -> (new table, granted bool (M,)).
+    """
+    rows, lanes = table2d.shape
+    flat = table2d.reshape(-1)
+    m = slots.shape[0]
+    idx = jnp.arange(m)
+    dup_earlier = (slots[None, :] == slots[:, None]) & (idx[None, :]
+                                                        < idx[:, None])
+    first = ~jnp.any(dup_earlier, axis=1)
+    if unconditional:
+        granted = jnp.ones((m,), jnp.bool_)
+        # duplicate slots: callers use unique slots or identical ids (clear)
+        new_flat = flat.at[slots].set(ids.astype(flat.dtype))
+    else:
+        free = flat[slots] == 0
+        granted = first & free
+        # scatter only the granted requests (losers drop out of bounds)
+        new_flat = flat.at[jnp.where(granted, slots, flat.size)].set(
+            ids.astype(flat.dtype), mode="drop")
+    return new_flat.reshape(rows, lanes), granted
+
+
+def clear_ref(table2d: jax.Array, slots: jax.Array):
+    zeros = jnp.zeros_like(slots)
+    return publish_ref(table2d, slots, zeros, unconditional=True)[0]

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: batched visible-readers-table publish (CAS emulation).
+
+The reader fast path CASes ``table[slot]: 0 -> lock_id`` (paper Listing 1
+line 14).  The device-side lease table acquires many leases per engine step;
+this kernel applies a *batch* of publish requests with the same semantics as
+a sequence of CASes: the first request targeting a free slot wins, later
+requests for the same slot (and requests for occupied slots) fail.
+
+Single grid step; the whole table block lives in VMEM (4096 slots = 16KB).
+The request loop is a ``fori_loop`` of dynamic single-element loads/stores —
+latency-bound but tiny (M <= a few hundred).  ``unconditional=True`` turns
+the kernel into the *release* path (store 0 / overwrite regardless).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .table_scan import LANES
+
+
+def _publish_kernel(table_ref, slots_ref, ids_ref, out_table_ref,
+                    granted_ref, *, unconditional: bool):
+    out_table_ref[...] = table_ref[...]
+    m = slots_ref.shape[-1]
+
+    def body(i, _):
+        slot = slots_ref[0, i]
+        row = slot // LANES
+        col = slot % LANES
+        cur = pl.load(out_table_ref, (pl.ds(row, 1), pl.ds(col, 1)))[0, 0]
+        val = ids_ref[0, i]
+        if unconditional:
+            ok = jnp.bool_(True)
+        else:
+            ok = cur == 0
+        new = jnp.where(ok, val, cur)
+        pl.store(out_table_ref, (pl.ds(row, 1), pl.ds(col, 1)),
+                 new.reshape(1, 1))
+        granted_ref[0, i] = ok.astype(jnp.int8)
+        return 0
+
+    jax.lax.fori_loop(0, m, body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "unconditional"))
+def _publish_call(table2d: jax.Array, slots: jax.Array, ids: jax.Array,
+                  interpret: bool = False, unconditional: bool = False):
+    rows, lanes = table2d.shape
+    assert lanes == LANES, table2d.shape
+    m = slots.shape[0]
+    kern = functools.partial(_publish_kernel, unconditional=unconditional)
+    table_out, granted = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), table2d.dtype),
+            jax.ShapeDtypeStruct((1, m), jnp.int8),
+        ],
+        interpret=interpret,
+    )(table2d, slots.reshape(1, m).astype(jnp.int32),
+      ids.reshape(1, m).astype(table2d.dtype))
+    return table_out, granted[0].astype(jnp.bool_)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: visible-readers-table revocation scan.
+
+The BRAVO writer's revocation step scans the whole visible-readers table for
+slots publishing its lock (paper Listing 1 lines 42-44).  The paper's future
+work proposes accelerating this scan with SIMD (AVX) and non-polluting
+loads; on TPU the idiomatic equivalent is a VPU-vectorized scan that streams
+the table through VMEM tiles (never resident in caches the MXU path cares
+about).
+
+Layout: the table is shaped (rows, 128) int32 — 128 lanes per VPU register
+row; block = (BLOCK_ROWS, 128) tiles.  Outputs: a per-slot match mask (int8)
+and the total match count (accumulated across sequential grid steps, as TPU
+grid iterations execute in order on a core).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 8
+
+
+def _scan_kernel(lock_ref, table_ref, mask_ref, count_ref):
+    blk = table_ref[...]                       # (BLOCK_ROWS, 128) int32
+    m = (blk == lock_ref[0, 0])
+    mask_ref[...] = m.astype(jnp.int8)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        count_ref[0, 0] = 0
+
+    count_ref[0, 0] += jnp.sum(m.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _scan_call(table2d: jax.Array, lock_id: jax.Array,
+               interpret: bool = False):
+    rows, lanes = table2d.shape
+    assert lanes == LANES and rows % BLOCK_ROWS == 0, table2d.shape
+    grid = (rows // BLOCK_ROWS,)
+    lock = jnp.reshape(lock_id.astype(table2d.dtype), (1, 1))
+    mask, count = pl.pallas_call(
+        _scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.int8),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lock, table2d)
+    return mask, count[0, 0]

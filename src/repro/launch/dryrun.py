@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable (e)).
+
+For every (architecture x input-shape x mesh) cell: build the production
+mesh, lower the appropriate step (train_step / prefill / serve_step) with
+explicit in/out shardings, ``.compile()`` it, and record
+``memory_analysis()`` + ``cost_analysis()`` + trip-count-aware HLO roofline
+terms (deliverable (g)) as JSON under reports/dryrun/.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.analysis.roofline import (analytic_memory_bytes, build_roofline,
+                                     model_flops_for)
+from repro.dist.sharding import (MeshRules, _divisible, batch_spec,
+                                 cache_specs, param_specs, zero1_specs)
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.serving.steps import make_decode_step, make_prefill_step
+from repro.training.optimizer import OptimizerConfig, adamw_init
+from repro.training.train_step import TrainConfig, make_train_step
+
+REPORT_DIR = Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+
+MICROBATCH_TOKENS = 8192  # per-DP-shard tokens per microbatch: balances
+#                           activation memory against per-microbatch grad
+#                           reductions + weight re-gathers (§Perf iter 2)
+
+
+def ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def tree_ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: ns(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(cfg, batch_sds, rules, mesh):
+    bax = rules.batch_axes(mesh) or None
+
+    def spec_for(name, leaf):
+        if name == "embeds":
+            return _divisible(P(bax, None, None), leaf.shape, mesh)
+        return _divisible(P(bax, None), leaf.shape, mesh)
+
+    return {k: ns(mesh, spec_for(k, v)) for k, v in batch_sds.items()}
+
+
+def lower_cell(arch: str, shape_name: str, mesh_name: str,
+               rules_override=None, tcfg: TrainConfig = None,
+               opt_state_dtype=None):
+    cfg, rules, _ = configs.get(arch)
+    if rules_override is not None:
+        rules = rules_override
+    shape = configs.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+    B, Sq = shape.global_batch, shape.seq_len
+
+    import math
+    pshape = S.params_shape(cfg)
+    n_params = sum(math.prod(l.shape) for l in jax.tree.leaves(pshape))
+    pspecs = param_specs(pshape, rules, mesh)
+    pshard = tree_ns(mesh, pspecs)
+
+    if shape.kind == "train":
+        dp = 1
+        for a in (rules.batch_axes(mesh) or ()):
+            dp *= mesh.shape[a]
+        tokens_per_dp = B * Sq // dp
+        micro = max(1, tokens_per_dp // MICROBATCH_TOKENS)
+        # microbatching splits the batch dim; keep it divisible
+        while B % (micro) != 0 or (B // micro) % dp != 0:
+            micro //= 2
+        micro = max(micro, 1)
+        big = n_params > 100e9
+        bf16_params = jnp.dtype(cfg.param_dtype) == jnp.bfloat16
+        tcfg = tcfg or TrainConfig(
+            remat="full", microbatches=micro,
+            accum_dtype="bfloat16" if (big or bf16_params) else "float32")
+        sd = opt_state_dtype or (jnp.bfloat16 if big else jnp.float32)
+        opt = OptimizerConfig(state_dtype=sd)
+        ostate_shape = jax.eval_shape(lambda p: adamw_init(p, opt), pshape)
+        mspecs = zero1_specs(pspecs, pshape, mesh)   # ZeRO-1 moments
+        ospecs = {"m": mspecs, "v": mspecs, "step": P()}
+        oshard = tree_ns(mesh, ospecs)
+        batch_sds = S.batch_specs(cfg, B, Sq)
+        bshard = batch_shardings(cfg, batch_sds, rules, mesh)
+        step = make_train_step(cfg, opt, mesh, rules, tcfg)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+        args = (pshape, ostate_shape, batch_sds)
+        extra = {"microbatches": tcfg.microbatches,
+                 "opt_state_bytes": jnp.dtype(sd).itemsize,
+                 "opt_state_dtype": str(jnp.dtype(sd).name)}
+    elif shape.kind == "prefill":
+        batch_sds = S.batch_specs(cfg, B, Sq)
+        bshard = batch_shardings(cfg, batch_sds, rules, mesh)
+        # prefill caches: batch over dp, seq over model
+        prules = rules
+        step = make_prefill_step(cfg, mesh, prules)
+        cache_sds = None
+        if cfg.family != "audio":
+            cache_sds = jax.eval_shape(
+                lambda: M.init_caches(cfg, B, Sq, dtype=jnp.bfloat16))
+        out_shardings = None
+        jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                         out_shardings=out_shardings)
+        args = (pshape, batch_sds)
+        extra = {}
+    else:  # decode
+        seq_axes = ("data", "model") if B == 1 else ("model",)
+        pspecs = param_specs(pshape, rules, mesh, decode=True)
+        pshard = tree_ns(mesh, pspecs)
+        cshape, token_sds, len_sds = S.decode_specs(cfg, B, Sq)
+        cspecs = cache_specs(cshape, rules, mesh, seq_axes=seq_axes)
+        cshard = tree_ns(mesh, cspecs)
+        bax = rules.batch_axes(mesh) or None
+        tshard = ns(mesh, _divisible(P(bax, None), token_sds.shape, mesh))
+        lshard = ns(mesh, P())   # scalar uniform cache length
+        step = make_decode_step(cfg, mesh, rules)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, cshard, tshard, lshard),
+                         out_shardings=(tshard, None, cshard),
+                         donate_argnums=(1,))
+        args = (pshape, cshape, token_sds, len_sds)
+        extra = {"cache_seq_axes": list(seq_axes)}
+
+    t0 = time.time()
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {k: int(getattr(mem, k)) for k in dir(mem)
+                 if k.endswith("_in_bytes") and not k.startswith("_")}
+    except Exception as e:  # pragma: no cover
+        mem_d = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        cost = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    mem_gb = (mem_d.get("argument_size_in_bytes", 0)
+              + mem_d.get("temp_size_in_bytes", 0)) / 1e9
+    roof = build_roofline(
+        arch=arch, shape=shape_name, mesh_name=mesh_name, chips=chips,
+        hlo_text=hlo,
+        cost=cost if "error" not in cost else {},
+        model_flops=model_flops_for(cfg, shape.kind, Sq, B),
+        memory_per_chip_gb=mem_gb)
+    # analytic TPU memory model (parsed CPU-HLO traffic is an upper bound)
+    dp = 1
+    for a in (rules.batch_axes(mesh) or ()):
+        dp *= mesh.shape[a]
+    tp = mesh.shape.get("model", 1)
+    pb = jnp.dtype(cfg.param_dtype).itemsize
+    ob = int(extra.get("opt_state_bytes", 4))
+    cache_bytes = 0.0
+    if shape.kind in ("prefill", "decode") and cfg.family != "audio":
+        csh = jax.eval_shape(lambda: M.init_caches(cfg, B, Sq))
+        cache_bytes = sum(
+            math.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+            for l in jax.tree.leaves(csh)) / chips
+    roof.analytic_bytes_per_chip = analytic_memory_bytes(
+        cfg, shape.kind, Sq, B, dp=dp, tp=tp,
+        micro=int(extra.get("microbatches", 1)),
+        param_bytes=pb, opt_state_bytes=ob,
+        cache_bytes_per_chip=cache_bytes,
+        collective_bytes_per_chip=roof.collective_bytes_per_chip)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "n_params": n_params,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_d, "memory_per_chip_gb": round(mem_gb, 3),
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if k in ("flops", "bytes accessed",
+                                   "transcendentals", "error")},
+        "roofline": roof.to_dict(),
+        **extra,
+    }
+    return rec
+
+
+def run_cell(arch, shape_name, mesh_name, outdir: Path):
+    key = f"{arch}__{shape_name}__{mesh_name}"
+    out = outdir / f"{key}.json"
+    try:
+        rec = lower_cell(arch, shape_name, mesh_name)
+        rec["status"] = "ok"
+        r = rec["roofline"]
+        print(f"[ok] {key}: mem/chip={rec['memory_per_chip_gb']:.2f}GB "
+              f"t_comp={r['t_compute']*1e3:.1f}ms "
+              f"t_mem={r['t_memory']*1e3:.1f}ms "
+              f"t_coll={r['t_collective']*1e3:.1f}ms "
+              f"bottleneck={r['bottleneck']} mfu={r['mfu']:.2%} "
+              f"(compile {rec['compile_s']:.0f}s)", flush=True)
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": str(e)[-4000:],
+               "traceback": traceback.format_exc()[-8000:]}
+        print(f"[ERR] {key}: {str(e)[:300]}", flush=True)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(REPORT_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    outdir = Path(args.out)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    cells = []
+    if args.all:
+        for a, s, skip in configs.all_cells():
+            if skip is None:
+                cells.append((a, s))
+            else:
+                print(f"[skip] {a} x {s}: {skip}", flush=True)
+                outdir.mkdir(parents=True, exist_ok=True)
+                for m in meshes:
+                    (outdir / f"{a}__{s}__{m}.json").write_text(json.dumps(
+                        {"arch": a, "shape": s, "mesh": m,
+                         "status": "skipped", "reason": skip}))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    n_err = 0
+    for a, s in cells:
+        for m in meshes:
+            if args.skip_existing and (outdir / f"{a}__{s}__{m}.json").exists():
+                prev = json.loads((outdir / f"{a}__{s}__{m}.json").read_text())
+                if prev.get("status") == "ok":
+                    print(f"[cached] {a}__{s}__{m}", flush=True)
+                    continue
+            rec = run_cell(a, s, m, outdir)
+            n_err += rec.get("status") != "ok"
+    print(f"done; {n_err} errors", flush=True)
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

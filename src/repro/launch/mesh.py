@@ -1,0 +1,33 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single pod: 16x16 = 256 chips (data, model).  Multi-pod:
+2x16x16 = 512 chips (pod, data, model) — the "pod" axis is the slow
+inter-pod (DCN) dimension and only ever carries data parallelism.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+
+    import numpy as np
+    from jax.sharding import Mesh
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices (set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count=512 before importing jax); have {len(devs)}")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_local_mesh(model: int = 1, data: int = 1):
+    """Small mesh over however many (possibly fake) local devices exist —
+    used by tests and the CPU examples."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(arch, shape)`` returns the kwargs for lowering ``train_step``
+(train shapes) or ``decode_step``/``prefill`` (inference shapes), matching
+the assigned shape table.  Frontend-stub archs (audio/vlm) receive
+precomputed frame/patch embeddings here, per the brief.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..models import model as M
+from ..models.common import ModelConfig
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    """Training/prefill batch: tokens + labels (+ stub frontend embeds)."""
+    if cfg.family == "audio":
+        return {"embeds": sds((B, S, cfg.d_model), jnp.bfloat16),
+                "labels": sds((B, S), jnp.int32)}
+    if cfg.frontend_tokens:
+        F = cfg.frontend_tokens
+        return {"tokens": sds((B, S - F), jnp.int32),
+                "embeds": sds((B, F, cfg.d_model), jnp.bfloat16),
+                "labels": sds((B, S), jnp.int32)}
+    return {"tokens": sds((B, S), jnp.int32),
+            "labels": sds((B, S), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, B: int, S: int,
+                 cache_dtype=jnp.bfloat16) -> Tuple[Any, ...]:
+    """(caches, token, cache_len) stand-ins for a decode step with a KV/SSM
+    cache of length S.  cache_len is a scalar (uniform batch) — the
+    production serve_step contract; per-request lengths live in the engine's
+    host-side batcher."""
+    caches = jax.eval_shape(
+        lambda: M.init_caches(cfg, B, S, dtype=cache_dtype))
+    token = sds((B, 1), jnp.int32)
+    cache_len = sds((), jnp.int32)
+    return caches, token, cache_len
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,322 @@
+"""Shared model building blocks: norms, RoPE, blockwise (flash) attention,
+parameter initialization, and the model config dataclass.
+
+Everything is pure JAX (no flax).  Parameters are nested dicts of
+``jnp.ndarray``; layer stacks carry a leading ``L`` dimension and are
+consumed with ``lax.scan`` to bound HLO size and compile time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    act: str = "silu"             # silu | gelu
+    glu: bool = True              # gated MLP (SwiGLU / GeGLU)
+    norm_eps: float = 1e-5
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    causal: bool = True           # False for encoder-only (hubert)
+    tie_embeddings: bool = False
+    # --- MoE ---
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_every: int = 1            # every k-th layer is MoE (llama4: 2)
+    moe_shared_expert: bool = False
+    moe_d_ff: int = 0             # 0 -> d_ff
+    capacity_factor: float = 1.25
+    # --- SSM / hybrid ---
+    ssm_kind: str = ""            # "rwkv6" | "mamba2"
+    ssm_state: int = 0            # mamba2 d_state / rwkv head size
+    ssm_expand: int = 2           # mamba2 expansion
+    hybrid_attn_every: int = 0    # zamba2: shared attn block every k layers
+    # --- frontend stubs ---
+    frontend: str = ""            # "" | "vision_stub" | "audio_stub"
+    frontend_tokens: int = 0      # prompt prefix length fed as embeddings
+    # --- numerics ---
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    # --- attention impl ---
+    attn_block_q: int = 512
+    attn_block_kv: int = 1024
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.hd
+
+    def num_params(self) -> int:
+        """Analytic parameter count (for 6ND roofline math)."""
+        return int(sum(x.size for x in jax.tree.leaves(
+            jax.eval_shape(lambda: init_placeholder(self)))))
+
+    def num_active_params(self) -> int:
+        """Active parameters per token (MoE: only routed-to experts)."""
+        total = self.num_params()
+        if not self.moe_experts:
+            return total
+        # subtract inactive expert params
+        d_ff = self.moe_d_ff or self.d_ff
+        n_mats = 3 if self.glu else 2
+        per_expert = n_mats * self.d_model * d_ff
+        n_moe_layers = len([i for i in range(self.n_layers)
+                            if (i % self.moe_every) == self.moe_every - 1])
+        inactive = n_moe_layers * (self.moe_experts - self.moe_top_k) \
+            * per_expert
+        return int(total - inactive)
+
+
+def init_placeholder(cfg: ModelConfig):
+    # lazy import to avoid cycles; used only under eval_shape
+    from . import model as _model
+    return _model.init_params(jax.random.PRNGKey(0), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * lax.rsqrt(var + eps)) * (1.0 + scale)).astype(dt)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise ("flash") attention — pure jnp/lax, O(S) memory.
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, block_q: int = 512, block_kv: int = 1024,
+                    q_offset: int = 0) -> jax.Array:
+    """Online-softmax blockwise attention.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, KVH, hd) with H % KVH == 0.
+    ``q_offset`` is the absolute position of q[0] (for causal masking when
+    Sq != Skv, e.g. decode against a cache).  Memory is O(block_q*block_kv)
+    per head instead of O(Sq*Skv) — mandatory for the 32k prefill shapes.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KVH, _ = k.shape
+    g = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    nq = (Sq + block_q - 1) // block_q
+    nkv = (Skv + block_kv - 1) // block_kv
+    # pad sequences to block multiples
+    q = _pad_to(q, 1, nq * block_q)
+    k = _pad_to(k, 1, nkv * block_kv)
+    v = _pad_to(v, 1, nkv * block_kv)
+
+    # (B, nq, bq, H, hd) -> per-q-block computation
+    qb = q.reshape(B, nq, block_q, H, hd)
+    kb = k.reshape(B, nkv, block_kv, KVH, hd)
+    vb = v.reshape(B, nkv, block_kv, KVH, hd)
+
+    q_pos = q_offset + jnp.arange(nq * block_q).reshape(nq, block_q)
+    k_pos = jnp.arange(nkv * block_kv).reshape(nkv, block_kv)
+    kv_valid = (jnp.arange(nkv * block_kv) < Skv).reshape(nkv, block_kv)
+
+    def per_qblock(qi: jax.Array, qp: jax.Array) -> jax.Array:
+        # qi: (B, bq, H, hd); qp: (bq,)
+        def body(carry, inp):
+            m, l, acc = carry
+            ki, vi, kp, valid = inp
+            # scores: (B, H, bq, bkv) via grouped heads
+            kig = jnp.repeat(ki, g, axis=2)
+            vig = jnp.repeat(vi, g, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, kig,
+                           preferred_element_type=jnp.float32) * scale
+            mask = valid[None, None, None, :]
+            if causal:
+                mask = mask & (kp[None, None, None, :]
+                               <= qp[None, None, :, None])
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard all-masked rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask, p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vig.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, block_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        a0 = jnp.zeros((B, H, block_q, hd), jnp.float32)
+        kbs = jnp.moveaxis(kb, 1, 0)  # (nkv, B, bkv, KVH, hd)
+        vbs = jnp.moveaxis(vb, 1, 0)
+        (m, l, acc), _ = lax.scan(body, (m0, l0, a0),
+                                  (kbs, vbs, k_pos, kv_valid))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, bq, H, hd)
+
+    outs = lax.map(lambda args: per_qblock(*args),
+                   (jnp.moveaxis(qb, 1, 0), q_pos))     # (nq, B, bq, H, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * block_q, H, hd)
+    return out[:, :Sq]
+
+
+def flash_attention_kvscan(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool, block_kv: int = 1024,
+                           q_offset: int = 0) -> jax.Array:
+    """Blockwise attention with the q dimension fully vectorized (only the
+    KV dimension is scanned).
+
+    Used when attention heads are NOT divisible by the TP width (llama4 40H,
+    minicpm 36H, gemma 8H on |model|=16): the q *sequence* dim is sharded
+    over "model" instead of heads — every chip owns Sq/TP rows with all
+    heads, K/V (small under GQA/MQA) are replicated, and no collective or
+    resharding appears inside the scan.  Trade-off: masked (q,kv) blocks are
+    computed then discarded (~2x attention FLOPs for causal training) —
+    accounted in EXPERIMENTS.md §Roofline usefulness.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KVH, _ = k.shape
+    g = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    block_kv = min(block_kv, Skv)
+    nkv = (Skv + block_kv - 1) // block_kv
+    k = _pad_to(k, 1, nkv * block_kv)
+    v = _pad_to(v, 1, nkv * block_kv)
+    kb = jnp.moveaxis(k.reshape(B, nkv, block_kv, KVH, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nkv, block_kv, KVH, hd), 1, 0)
+    k_pos = jnp.arange(nkv * block_kv).reshape(nkv, block_kv)
+    kv_valid = (jnp.arange(nkv * block_kv) < Skv).reshape(nkv, block_kv)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ki, vi, kp, valid = inp
+        kig = jnp.repeat(ki, g, axis=2)
+        vig = jnp.repeat(vi, g, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kig,
+                       preferred_element_type=jnp.float32) * scale
+        mask = valid[None, None, None, :]
+        if causal:
+            mask = mask & (kp[None, None, None, :]
+                           <= q_pos[None, None, :, None])
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vig.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0),
+                              (kb, vb, k_pos, kv_valid))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+def _pad_to(x: jax.Array, axis: int, size: int) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array) -> jax.Array:
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, hd); caches: (B, S, KVH, hd); cache_len: (B,) valid lengths
+    (the new token's K/V must already be written at cache_len-1).
+    """
+    B, S, KVH, hd = k_cache.shape
+    H = q.shape[2]
+    g = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qh = q[:, 0].reshape(B, KVH, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    mask = (jnp.arange(S)[None, :] < cache_len[:, None])[:, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype,
+               fan_in: Optional[int] = None) -> jax.Array:
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 \
+        else shape[-1]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key: jax.Array, n: int):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,307 @@
+"""Sub-quadratic sequence mixers: RWKV-6 ("Finch") and Mamba-2 (SSD),
+sharing one chunked linear-attention core.
+
+The recurrence  S_t+1 = diag(w_t) S_t + k_t (x) v_t,  y_t = q_t S_t (+bonus)
+is evaluated chunk-parallel:  within a chunk of C tokens the pairwise decay
+ratio exp(L_t - Lin_s) is formed from clamped per-step log-decays (lw >=
+LOG_DECAY_MIN, so |cumsum| <= C*|min| stays inside fp32 exp range), giving a
+matmul-dominated (MXU-friendly) evaluation; across chunks a lax.scan carries
+the (K, V) state with all decay factors <= 1 (unconditionally stable).
+Clamping bounds the fastest representable forgetting rate; see DESIGN.md
+(numerics) — this is the TPU-idiomatic adaptation of the CUDA step-recurrence.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ModelConfig, Params, dense_init, rms_norm, split_keys
+
+LOG_DECAY_MIN = -2.5     # per-step clamp; with CHUNK=32 -> |cum| <= 80 < 88
+CHUNK = 32
+
+
+# ---------------------------------------------------------------------------
+# Chunked linear attention core
+# ---------------------------------------------------------------------------
+
+
+def chunked_linear_attention(q, k, v, log_decay, *, bonus=None,
+                             inclusive: bool = False, chunk: int = CHUNK,
+                             state: Optional[jax.Array] = None):
+    """q,k: (B,S,H,K); v: (B,S,H,V); log_decay: broadcastable to (B,S,H,K).
+
+    ``inclusive``: decay applies to the current token too (Mamba-2), with an
+    implicit identity bonus; otherwise (RWKV-6) the current token contributes
+    through ``bonus`` (H,K) only.  Returns (y: (B,S,H,V), final state
+    (B,H,K,V)).
+    """
+    B, S, H, K = q.shape
+    V = v.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        q, k, v = (jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for x in (q, k, v))
+        log_decay = jnp.pad(
+            jnp.broadcast_to(log_decay, (B, S, H, K)).astype(jnp.float32),
+            ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    lw = jnp.maximum(
+        jnp.broadcast_to(log_decay, (B, Sp, H, K)).astype(jnp.float32),
+        LOG_DECAY_MIN)
+    lw = lw.reshape(B, nc, chunk, H, K)
+    qc = q.reshape(B, nc, chunk, H, K).astype(jnp.float32)
+    kc = k.reshape(B, nc, chunk, H, K).astype(jnp.float32)
+    vc = v.reshape(B, nc, chunk, H, V).astype(jnp.float32)
+
+    lin = jnp.cumsum(lw, axis=2)          # inclusive prefix  Lin_t
+    lex = lin - lw                        # exclusive prefix  L_t
+    ltot = lin[:, :, -1]                  # chunk totals      (B,nc,H,K)
+
+    q_exp = lin if inclusive else lex
+    qt = qc * jnp.exp(q_exp)              # bounded above by |q| (<= exp(0))
+    kt = kc * jnp.exp(-lin)               # bounded by exp(C*|min|) in fp32
+    kstate = kc * jnp.exp(ltot[:, :, None] - lin)   # factors <= 1
+
+    # intra-chunk attention
+    a = jnp.einsum("bnchk,bnshk->bnhcs", qt, kt)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    a = jnp.where(tri[None, None, None], a, 0.0)
+    if inclusive:
+        diag = jnp.einsum("bnchk,bnchk->bnhc", qc, kc)
+        a = a + diag[..., None] * jnp.eye(chunk)[None, None, None]
+    elif bonus is not None:
+        diag = jnp.einsum("bnchk,hk,bnchk->bnhc", qc,
+                          bonus.astype(jnp.float32), kc)
+        a = a + diag[..., None] * jnp.eye(chunk)[None, None, None]
+    y_intra = jnp.einsum("bnhcs,bnshv->bnchv", a, vc)
+
+    # inter-chunk: scan the state across chunks
+    if state is None:
+        state = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def body(s, inp):
+        qt_i, kst_i, v_i, ltot_i = inp
+        y = jnp.einsum("bchk,bhkv->bchv", qt_i, s)
+        upd = jnp.einsum("bchk,bchv->bhkv", kst_i, v_i)
+        s_new = s * jnp.exp(ltot_i)[..., None] + upd
+        return s_new, y
+
+    xs = (jnp.moveaxis(qt, 1, 0), jnp.moveaxis(kstate, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(ltot, 1, 0))
+    state, y_inter = lax.scan(body, state, xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    y = y.reshape(B, Sp, H, V)[:, :S]
+    return y.astype(v.dtype), state
+
+
+def linear_attention_step(q, k, v, log_decay, state, *, bonus=None,
+                          inclusive: bool = False):
+    """Single-token recurrence for decode.  q,k: (B,H,K); v: (B,H,V);
+    state: (B,H,K,V) -> (y: (B,H,V), new state)."""
+    lw = jnp.maximum(jnp.broadcast_to(log_decay, q.shape).astype(jnp.float32),
+                     LOG_DECAY_MIN)
+    q32, k32, v32 = (x.astype(jnp.float32) for x in (q, k, v))
+    kv = jnp.einsum("bhk,bhv->bhkv", k32, v32)
+    if inclusive:
+        state = state * jnp.exp(lw)[..., None] + kv
+        y = jnp.einsum("bhk,bhkv->bhv", q32, state)
+    else:
+        eff = state + (bonus.astype(jnp.float32)[None, :, :, None] * kv
+                       if bonus is not None else kv * 0)
+        y = jnp.einsum("bhk,bhkv->bhv", q32, eff)
+        state = state * jnp.exp(lw)[..., None] + kv
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 ("Finch") block
+# ---------------------------------------------------------------------------
+
+RWKV_HEAD = 64       # official head size
+MAA_RANK = 32        # token-shift ddlerp LoRA rank
+DECAY_RANK = 64      # data-dependent decay LoRA rank
+
+
+def init_rwkv6(key, cfg: ModelConfig, n: int) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    H = d // RWKV_HEAD
+    ks = split_keys(key, 16)
+    dt = cfg.param_dtype
+    z = lambda *s: jnp.zeros((n,) + s, dt)  # noqa: E731
+    return {
+        "ln1": z(d), "ln2": z(d),
+        # time-mix (ddlerp): base mixes + low-rank data-dependent part
+        "maa_x": z(d), "maa_wkvrg": z(5, d),
+        "maa_w1": dense_init(ks[0], (n, d, 5 * MAA_RANK), dt),
+        "maa_w2": dense_init(ks[1], (n, 5, MAA_RANK, d), dt, fan_in=MAA_RANK),
+        # data-dependent decay
+        "decay_base": jnp.full((n, d), -4.0, dt),   # w ~ exp(-exp(-4)) ~ .98
+        "decay_w1": dense_init(ks[2], (n, d, DECAY_RANK), dt),
+        "decay_w2": dense_init(ks[3], (n, DECAY_RANK, d), dt,
+                               fan_in=DECAY_RANK),
+        "bonus": dense_init(ks[4], (n, H, RWKV_HEAD), dt, fan_in=RWKV_HEAD),
+        "wr": dense_init(ks[5], (n, d, d), dt),
+        "wk": dense_init(ks[6], (n, d, d), dt),
+        "wv": dense_init(ks[7], (n, d, d), dt),
+        "wg": dense_init(ks[8], (n, d, d), dt),
+        "wo": dense_init(ks[9], (n, d, d), dt),
+        "ln_x": z(d),
+        # channel-mix
+        "cm_mk": z(d), "cm_mr": z(d),
+        "cm_k": dense_init(ks[10], (n, d, ff), dt),
+        "cm_v": dense_init(ks[11], (n, ff, d), dt, fan_in=ff),
+        "cm_r": dense_init(ks[12], (n, d, d), dt),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x: (B,S,d); prev: (B,d) = last token of the previous segment."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                   shift_prev: jax.Array, state: Optional[jax.Array],
+                   chunk: int = CHUNK):
+    B, S, d = x.shape
+    H = d // RWKV_HEAD
+    xs = _token_shift(x, shift_prev)
+    xx = xs - x
+    # ddlerp: data-dependent token-shift mixing for w,k,v,r,g
+    base = x + xx * p["maa_x"]
+    mixl = jnp.tanh(base @ p["maa_w1"]).reshape(B, S, 5, MAA_RANK)
+    mix = jnp.einsum("bsfr,frd->bsfd", mixl, p["maa_w2"])  # (B,S,5,d)
+    mix = mix + p["maa_wkvrg"]
+    xw, xk, xv, xr, xg = (x + xx * mix[:, :, i] for i in range(5))
+
+    lw = -jnp.exp(p["decay_base"]
+                  + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"])
+    r = (xr @ p["wr"]).reshape(B, S, H, RWKV_HEAD)
+    k = (xk @ p["wk"]).reshape(B, S, H, RWKV_HEAD)
+    v = (xv @ p["wv"]).reshape(B, S, H, RWKV_HEAD)
+    g = jax.nn.silu(xg @ p["wg"])
+    lw = lw.reshape(B, S, H, RWKV_HEAD)
+
+    y, state = chunked_linear_attention(r, k, v, lw, bonus=p["bonus"],
+                                        inclusive=False, chunk=chunk,
+                                        state=state)
+    y = y.reshape(B, S, d)
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    return (y @ p["wo"]).astype(x.dtype), x[:, -1], state
+
+
+def rwkv6_channel_mix(p: Params, x: jax.Array, *, shift_prev: jax.Array):
+    xs = _token_shift(x, shift_prev)
+    xx = xs - x
+    xk = x + xx * p["cm_mk"]
+    xr = x + xx * p["cm_mr"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    out = jax.nn.sigmoid(xr @ p["cm_r"]) * (kk @ p["cm_v"])
+    return out.astype(x.dtype), x[:, -1]
+
+
+def rwkv6_block(p: Params, x: jax.Array, cfg: ModelConfig, cache=None,
+                chunk: int = CHUNK):
+    """cache: {"shift1": (B,d), "shift2": (B,d), "state": (B,H,K,V)}."""
+    B, S, d = x.shape
+    H = d // RWKV_HEAD
+    if cache is None:
+        cache = {
+            "shift1": jnp.zeros((B, d), x.dtype),
+            "shift2": jnp.zeros((B, d), x.dtype),
+            "state": jnp.zeros((B, H, RWKV_HEAD, RWKV_HEAD), jnp.float32),
+        }
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, s1, st = rwkv6_time_mix(p, h, cfg, shift_prev=cache["shift1"],
+                               state=cache["state"], chunk=chunk)
+    x = x + a
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    m, s2 = rwkv6_channel_mix(p, h2, shift_prev=cache["shift2"])
+    x = x + m
+    return x, {"shift1": s1.astype(x.dtype), "shift2": s2.astype(x.dtype),
+               "state": st}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ---------------------------------------------------------------------------
+
+MAMBA_HEAD = 64
+MAMBA_CONV = 4
+
+
+def init_mamba2(key, cfg: ModelConfig, n: int) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ds = cfg.ssm_state
+    nh = di // MAMBA_HEAD
+    ks = split_keys(key, 6)
+    dt = cfg.param_dtype
+    return {
+        "ln": jnp.zeros((n, d), dt),
+        # fused input projection: [z (di), x (di), B (ds), C (ds), dt (nh)]
+        "in_proj": dense_init(ks[0], (n, d, 2 * di + 2 * ds + nh), dt),
+        "conv_w": dense_init(ks[1], (n, MAMBA_CONV, di + 2 * ds), dt,
+                             fan_in=MAMBA_CONV),
+        "a_log": jnp.zeros((n, nh), dt),        # A = -exp(a_log)
+        "dt_bias": jnp.full((n, nh), -2.0, dt),  # softplus^-1-ish small dt
+        "d_skip": jnp.ones((n, nh), dt),
+        "out_ln": jnp.zeros((n, di), dt),
+        "out_proj": dense_init(ks[2], (n, di, d), dt, fan_in=di),
+    }
+
+
+def mamba2_block(p: Params, x: jax.Array, cfg: ModelConfig, cache=None,
+                 chunk: int = CHUNK):
+    """cache: {"conv": (B, MAMBA_CONV-1, di+2ds), "state": (B,nh,ds,hd)}."""
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    ds = cfg.ssm_state
+    nh = di // MAMBA_HEAD
+    decode = cache is not None and S == 1
+    if cache is None:
+        cache = {
+            "conv": jnp.zeros((B, MAMBA_CONV - 1, di + 2 * ds), x.dtype),
+            "state": jnp.zeros((B, nh, ds, MAMBA_HEAD), jnp.float32),
+        }
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]
+    z, xc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * ds], axis=-1)
+    # causal depthwise conv over (x, B, C)
+    seq = jnp.concatenate([cache["conv"], xc], axis=1)
+    conv_cache = seq[:, -(MAMBA_CONV - 1):]
+    stacked = jnp.stack([seq[:, i:i + S] for i in range(MAMBA_CONV)], axis=2)
+    xc = jax.nn.silu(jnp.einsum("bskc,kc->bsc", stacked, p["conv_w"]))
+    xs, bmat, cmat = jnp.split(xc, [di, di + ds], axis=-1)
+
+    dtv = jax.nn.softplus(dt_raw + p["dt_bias"])            # (B,S,nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (nh,)
+    lw = (dtv.astype(jnp.float32) * a)[..., None]           # (B,S,nh,1)
+
+    xh = xs.reshape(B, S, nh, MAMBA_HEAD)
+    # B/C shared across heads (n_groups=1): broadcast to (B,S,nh,ds)
+    bh = jnp.broadcast_to(bmat[:, :, None], (B, S, nh, ds))
+    ch = jnp.broadcast_to(cmat[:, :, None], (B, S, nh, ds))
+    kv = xh * dtv[..., None]                                # dt-scaled input
+
+    if decode:
+        y, state = linear_attention_step(
+            ch[:, 0], bh[:, 0], kv[:, 0], lw[:, 0], cache["state"],
+            inclusive=True)
+        y = y[:, None]
+    else:
+        y, state = chunked_linear_attention(ch, bh, kv, lw, inclusive=True,
+                                            chunk=chunk,
+                                            state=cache["state"])
+    y = y + xh * p["d_skip"][:, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y, p["out_ln"], cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ p["out_proj"]).astype(x.dtype)
+    return x + out, {"conv": conv_cache, "state": state}

@@ -1,0 +1,57 @@
+"""Jitted serving steps.
+
+* prefill: full forward over the prompt, returning last-position logits and
+  populated caches (decoder families) — also used as the encoder forward for
+  encoder-only archs.
+* decode (serve_step): one new token against a KV/SSM cache of length
+  ``seq_len`` — this is what the ``decode_*`` / ``long_*`` dry-run shapes
+  lower, per the brief.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh
+
+from ..dist.sharding import MeshRules
+from ..models import model as M
+from ..models.common import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, rules: MeshRules):
+    def prefill(params, batch):
+        logits, _, caches = M.forward(params, cfg, batch, mesh=mesh,
+                                      rules=rules)
+        return logits[:, -1], caches
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, rules: MeshRules,
+                     sample: str = "greedy"):
+    """decode_step(params, caches, token, cache_len) ->
+    (next_token, logits, caches').
+
+    ``caches`` layouts come from ``models.model.init_caches``; attention
+    caches hold ``cache_len - 1`` valid entries and the new K/V is written at
+    ``cache_len - 1``... i.e. callers pass cache_len = old_len + 1.
+    """
+
+    def decode(params, caches, token, cache_len):
+        batch = {"tokens": token}
+        if cfg.family == "audio":
+            raise ValueError("encoder-only arch has no decode step")
+        logits, _, caches = M.forward(params, cfg, batch, mesh=mesh,
+                                      rules=rules, caches=caches,
+                                      cache_len=cache_len)
+        logits = logits[:, -1]
+        if sample == "greedy":
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            raise ValueError(sample)
+        return nxt[:, None], logits, caches
+
+    return decode

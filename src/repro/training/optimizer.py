@@ -1,0 +1,93 @@
+"""AdamW with cosine or WSD (warmup-stable-decay, MiniCPM) schedules.
+
+Optimizer state dtype is configurable: fp32 by default, bf16 for the 400B
+MoE so that (params + m + v) fits 256x16GB (DESIGN.md §5, noted per-cell in
+EXPERIMENTS.md §Dry-run).  State shardings mirror the 2D (fsdp x tp) param
+shardings -> ZeRO-style partitioning for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"          # "cosine" | "wsd" | "const"
+    wsd_decay_frac: float = 0.1       # MiniCPM: last 10% decays
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32    # bf16 for the 400B config
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "cosine":
+        t = jnp.clip((s - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        mult = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        decay_start = cfg.total_steps * (1.0 - cfg.wsd_decay_frac)
+        t = jnp.clip((s - decay_start)
+                     / max(cfg.total_steps - decay_start, 1), 0.0, 1.0)
+        mult = jnp.exp(-4.0 * t)      # ~exponential anneal (MiniCPM WSD)
+    else:
+        mult = 1.0
+    return cfg.lr * warm * mult
+
+
+def adamw_init(params: Any, cfg: OptimizerConfig) -> Any:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, cfg.state_dtype), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params: Any, grads: Any, state: Any,
+                 cfg: OptimizerConfig) -> Tuple[Any, Any, jax.Array]:
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    sd = cfg.state_dtype
+    # bf16-state configs (the 400B MoE) also run the update math in bf16:
+    # the CPU dry-run backend materializes every fp32 intermediate (TPU
+    # would fuse them), and fp32 copies of a 400B tree are ~19GB/chip.
+    cd = jnp.float32 if jnp.dtype(sd) == jnp.float32 else jnp.bfloat16
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(cd) * scale.astype(cd)
+        m32 = m.astype(cd) * cfg.b1 + (1 - cfg.b1) * g
+        v32 = v.astype(cd) * cfg.b2 + (1 - cfg.b2) * jnp.square(g)
+        mh = m32 / bc1.astype(cd)
+        vh = v32 / bc2.astype(cd)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(cd)
+        newp = p.astype(cd) - lr.astype(cd) * delta
+        return newp.astype(p.dtype), m32.astype(sd), v32.astype(sd)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    newp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    newm = jax.tree.map(lambda t: t[1], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    newv = jax.tree.map(lambda t: t[2], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    return newp, {"m": newm, "v": newv, "step": step}, gnorm

@@ -1,0 +1,145 @@
+"""Per-arch smoke tests: reduced same-family configs, one forward/train step
+on CPU asserting output shapes and finite values (brief: deliverable (f))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro import configs
+from repro.dist.sharding import MeshRules
+from repro.models import model as M
+from repro.models.common import ModelConfig
+from repro.serving.steps import make_decode_step, make_prefill_step
+from repro.training.optimizer import OptimizerConfig, adamw_init
+from repro.training.train_step import TrainConfig, make_train_step
+
+
+def one_device_mesh():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def smoke_batch(cfg: ModelConfig, key, B=4, S=16, labels=True):
+    b = {}
+    if cfg.family == "audio":
+        b["embeds"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                        jnp.bfloat16)
+    elif cfg.frontend_tokens:
+        F = cfg.frontend_tokens
+        b["tokens"] = jax.random.randint(key, (B, S - F), 0, cfg.vocab)
+        b["embeds"] = jax.random.normal(key, (B, F, cfg.d_model),
+                                        jnp.bfloat16)
+    else:
+        b["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    if labels:
+        b["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    return b
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    rules = MeshRules()
+    mesh = one_device_mesh()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    batch = smoke_batch(cfg, key)
+    opt = OptimizerConfig()
+    state = adamw_init(params, opt)
+    step = make_train_step(cfg, opt, mesh, rules,
+                           TrainConfig(remat="full", microbatches=2))
+    with mesh:
+        p2, s2, metrics = jax.jit(step)(params, state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    assert int(s2["step"]) == 1
+    # params actually moved
+    d0 = jax.tree.leaves(params)[1]
+    d1 = jax.tree.leaves(p2)[1]
+    assert not np.allclose(np.asarray(d0, np.float32),
+                           np.asarray(d1, np.float32))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_forward_shapes(arch):
+    cfg = configs.get_smoke(arch)
+    rules = MeshRules()
+    mesh = one_device_mesh()
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(key, cfg)
+    B, S = 2, 16
+    batch = smoke_batch(cfg, key, B=B, S=S, labels=False)
+    with mesh:
+        logits, aux, caches = M.forward(params, cfg, batch, mesh=mesh,
+                                        rules=rules)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", [a for a in configs.ARCH_IDS
+                                  if a not in ("hubert-xlarge",
+                                               "phi-3-vision-4.2b")])
+def test_smoke_prefill_decode_consistency(arch):
+    """Decode over a prompt must reproduce the prefill's next-token logits
+    (same model, same prefix) within numerical tolerance.  (hubert has no
+    decode; the vlm's image-embed prefix cannot be replayed through the
+    token decode path, so its prefill and decode prefixes differ.)"""
+    cfg = configs.get_smoke(arch)
+    rules = MeshRules()
+    mesh = one_device_mesh()
+    key = jax.random.PRNGKey(2)
+    params = M.init_params(key, cfg)
+    B, S = 2, 8
+    batch = smoke_batch(cfg, key, B=B, S=S, labels=False)
+    prefill = make_prefill_step(cfg, mesh, rules)
+    decode = make_decode_step(cfg, mesh, rules)
+    with mesh:
+        last_logits, _ = jax.jit(prefill)(params, batch)
+        # feed the same prompt token-by-token through decode
+        caches = M.init_caches(cfg, B, 32, dtype=jnp.bfloat16)
+        toks = batch.get("tokens")
+        if toks is None:
+            pytest.skip("frontend-only input")
+        dj = jax.jit(decode)
+        logits = None
+        for i in range(toks.shape[1]):
+            clen = jnp.full((B,), i + 1, jnp.int32)
+            _, logits, caches = dj(params, caches, toks[:, i:i + 1], clen)
+    a = np.asarray(last_logits, np.float32)
+    b = np.asarray(logits, np.float32)
+    corr = np.corrcoef(a.ravel(), b.ravel())[0, 1]
+    if cfg.moe_experts:
+        # prefill dispatch drops tokens over capacity; decode is dropless
+        # (dense local experts) — semantically close, not bit-equal
+        assert corr > 0.95, corr
+    else:
+        np.testing.assert_allclose(a, b, rtol=0.15, atol=0.3)
+        assert corr > 0.99, corr
+
+
+def test_full_configs_match_published_sizes():
+    """Analytic parameter counts are in range of the published sizes."""
+    expected = {
+        "llama4-maverick-400b-a17b": (380e9, 420e9),
+        "phi3.5-moe-42b-a6.6b": (39e9, 45e9),
+        "phi-3-vision-4.2b": (3.5e9, 4.5e9),
+        "hubert-xlarge": (0.8e9, 1.3e9),
+        "minicpm-2b": (2.2e9, 3.1e9),
+        "granite-20b": (18e9, 22e9),
+        "gemma-2b": (2.2e9, 2.8e9),
+        "llama3.2-1b": (1.0e9, 1.5e9),
+        "rwkv6-7b": (6e9, 8e9),
+        "zamba2-2.7b": (2.3e9, 3.1e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        cfg, _, _ = configs.get(arch)
+        n = cfg.num_params()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}," \
+                              f" {hi/1e9}]B"
+        na = cfg.num_active_params()
+        assert na <= n
+        if arch == "llama4-maverick-400b-a17b":
+            assert 12e9 <= na <= 22e9     # ~17B active
+        if arch == "phi3.5-moe-42b-a6.6b":
+            assert 5e9 <= na <= 8e9       # ~6.6B active
