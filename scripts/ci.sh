@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI entry point: fail fast on import-time breakage, then run the tier-1
+# suite and the lock smoke.  Usage: scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# collection must be clean: 6/9 test modules once failed at import because
+# repro.dist was missing — catch that class of regression first and cheaply
+python -m pytest -q --collect-only >/dev/null
+
+# tier-1 verify (ROADMAP.md)
+python -m pytest -x -q "$@"
+
+# lock zoo smoke (LiveMem + SimMem, every variant)
+python scripts/smoke_locks.py

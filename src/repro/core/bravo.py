@@ -100,7 +100,9 @@ class BRAVO(RWLock):
                 st.bias_sets += 1
         return ("slow", tok)
 
-    def release_read(self, tok=None) -> None:
+    def release_read(self, tok) -> None:
+        # the token is mandatory: it records which path (fast slot vs
+        # underlying lock) the acquire took — there is no tokenless release
         kind, x = tok
         if kind == "fast":
             x.store(0)
@@ -128,7 +130,9 @@ class BRAVO(RWLock):
                 self.stats.revocation_ns += now - start
         return tok
 
-    def release_write(self, tok=None) -> None:
+    def release_write(self, tok) -> None:
+        # mandatory for the same reason as release_read: the underlying
+        # lock (e.g. cohort-rw) may need its token back
         self.u.release_write(tok)
 
     def footprint_bytes(self) -> int:

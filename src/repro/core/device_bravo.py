@@ -27,6 +27,7 @@ import numpy as np
 from ..kernels import ops as K
 from .bravo import DEFAULT_N
 from .table import mix_hash
+from ..dist.sharding import shard_map_compat
 
 TABLE_SLOTS = 4096
 
@@ -128,7 +129,7 @@ def make_distributed_revoke(mesh, axis: str = "data"):
             m = (full == lid).astype(jnp.int32)
             return jnp.sum(m)
 
-        return jax.shard_map(
+        return shard_map_compat(
             body, mesh=mesh,
             in_specs=(P(axis, None), P()), out_specs=P(),
             check_vma=False)(table_sharded, lock_id)

@@ -45,13 +45,16 @@ class RWLock:
     def acquire_read(self):
         raise NotImplementedError
 
-    def release_read(self, tok=None) -> None:
+    def release_read(self, tok) -> None:
+        # tok is mandatory across the interface: several implementations
+        # (BRAVO, percpu, cohort-rw) cannot release without it; locks that
+        # need no token return None from acquire and ignore it here
         raise NotImplementedError
 
     def acquire_write(self):
         raise NotImplementedError
 
-    def release_write(self, tok=None) -> None:
+    def release_write(self, tok) -> None:
         raise NotImplementedError
 
     def footprint_bytes(self) -> int:
@@ -318,7 +321,8 @@ class PerCPULock(RWLock):
         self.subs[i].acquire_read()
         return i
 
-    def release_read(self, tok=None) -> None:
+    def release_read(self, tok) -> None:
+        # token = the CPU index acquired on; required, None would misindex
         self.subs[tok].release_read()
 
     def acquire_write(self):
@@ -404,7 +408,8 @@ class CohortRWLock(RWLock):
             self.egress[node].fetch_add(1)
             mem.wait_while(self.wflag, lambda v: v == 1)
 
-    def release_read(self, tok=None) -> None:
+    def release_read(self, tok) -> None:
+        # token = the NUMA node whose ingress we bumped; required
         self.egress[tok].fetch_add(1)
 
     def acquire_write(self):
@@ -421,7 +426,8 @@ class CohortRWLock(RWLock):
                 mem.wait_while(self.egress[n], lambda v, i=i: v < i)
         return node
 
-    def release_write(self, tok=None) -> None:
+    def release_write(self, tok) -> None:
+        # token = the node the cohort mutex was acquired on; required
         self.wflag.store(0)
         self.mutex.release(tok)
 

@@ -1,0 +1,19 @@
+"""Distributed-execution layer: mesh-rule sharding for params, optimizer
+state, KV/SSM caches, and activations.
+
+The design mirrors the paper's visible-readers table (BRAVO, 2018): hot
+state is *diffused* across topology axes instead of centralized, while the
+per-instance footprint — here a single small :class:`MeshRules` record per
+architecture — stays compact (cf. Compact NUMA-aware Locks, Dice & Kogan
+2018).
+"""
+
+from .sharding import (MeshRules, axis_size, batch_spec, cache_specs,
+                       constrain, constrain_layer_params, logical_to_spec,
+                       param_specs, shard_map_compat, zero1_specs)
+
+__all__ = [
+    "MeshRules", "axis_size", "batch_spec", "cache_specs", "constrain",
+    "constrain_layer_params", "logical_to_spec", "param_specs",
+    "shard_map_compat", "zero1_specs",
+]

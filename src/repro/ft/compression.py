@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
+from ..dist.sharding import shard_map_compat
 
 
 def compress_grads_int8(g: jax.Array,
@@ -56,7 +57,7 @@ def make_compressed_psum(mesh, axes: Tuple[str, ...]):
 
     def one_leaf(g, err):
         spec = P(*([None] * g.ndim))
-        return jax.shard_map(
+        return shard_map_compat(
             body, mesh=mesh,
             in_specs=(spec, spec), out_specs=(spec, spec),
             check_vma=False)(g, err)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..dist.sharding import axis_size, shard_map_compat
 from .common import (ModelConfig, Params, act_fn, apply_rope, decode_attention,
                      dense_init, flash_attention, flash_attention_kvscan,
                      rms_norm, split_keys)
@@ -226,7 +227,7 @@ def _moe_local(x, router, wi, wg, wo, cfg: ModelConfig,
         out = lax.psum(out, weight_resident_axes)
         didx = 0
         for ax in reversed(weight_resident_axes):
-            didx = didx * lax.axis_size(ax) + lax.axis_index(ax)
+            didx = didx * axis_size(ax) + lax.axis_index(ax)
         out = lax.dynamic_slice_in_dim(out, didx * rows0, rows0, axis=1)
 
     out = out.reshape(e_loc, n_model, cap, d).transpose(1, 0, 2, 3)
@@ -282,7 +283,7 @@ def _moe_local_tp(x_loc, router, wi, wg, wo, cfg: ModelConfig,
     if data_axes:
         didx = 0
         for ax in reversed(data_axes):
-            didx = didx * lax.axis_size(ax) + lax.axis_index(ax)
+            didx = didx * axis_size(ax) + lax.axis_index(ax)
         y = lax.dynamic_slice_in_dim(y, didx * T_loc, T_loc, axis=0)
     me = jnp.mean(probs, axis=0)
     ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
@@ -335,8 +336,8 @@ def moe_forward(p: Params, x: jax.Array, cfg: ModelConfig, mesh,
         out_specs = (P(token_axes, None), P())
 
     args = [h, p["router"], p["wi"], p.get("wg", p["wi"][..., :1]), p["wo"]]
-    y, aux = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)(*args)
+    y, aux = shard_map_compat(body, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)(*args)
     y = y.reshape(B, S, d).astype(x.dtype)
     if "shared" in p:  # always-on shared expert (llama4), outside shard_map
         sh = p["shared"]

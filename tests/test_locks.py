@@ -188,6 +188,57 @@ def test_footprint_accounting(name):
     assert env.table.footprint_bytes() == 4096 * 8  # 32KB shared table
 
 
+def test_revocation_inhibit_window_and_fastpath_recovery():
+    """Paper §3 (*primum non nocere*): after a writer revocation, readers
+    must NOT re-arm RBias while ``now < InhibitUntil`` (every acquisition in
+    the window takes the slow path), and once the window passes the bias
+    re-arms and ``fastpath_rate`` recovers."""
+    env = LockEnv(SimMem(1, SIM_TOPO), n=9)
+    lock = env.make("bravo-ba")
+    mem = env.mem
+
+    def run():
+        st = lock.stats
+        t = lock.acquire_read()          # slow path; arms RBias
+        lock.release_read(t)
+        t = lock.acquire_read()          # fast path
+        lock.release_read(t)
+        assert st.fast_acquires == 1
+        t = lock.acquire_write()         # revokes; opens the inhibit window
+        lock.release_write(t)
+        assert st.revocations == 1
+        inhibit = lock.inhibit_until.load()
+        assert inhibit > mem.now()
+
+        fast_before = st.fast_acquires
+        in_window = 0
+        while mem.now() < inhibit and in_window < 500:
+            t = lock.acquire_read()
+            if mem.now() < inhibit:      # still inside the window
+                assert lock.rbias.load() == 0, \
+                    "RBias re-armed before InhibitUntil"
+            lock.release_read(t)
+            in_window += 1
+        assert in_window >= 1
+        # every acquisition that started inside the window was slow-path
+        assert st.fast_acquires == fast_before
+        rate_window = st.fastpath_rate
+
+        while mem.now() < inhibit:       # idle past the window
+            mem.work(50)
+        t = lock.acquire_read()          # slow path; re-arms RBias
+        lock.release_read(t)
+        assert lock.rbias.load() == 1
+        fast_mid = st.fast_acquires
+        for _ in range(50):
+            t = lock.acquire_read()
+            lock.release_read(t)
+        assert st.fast_acquires == fast_mid + 50
+        assert st.fastpath_rate > rate_window
+
+    mem.run_threads([run])
+
+
 def test_shared_table_across_locks():
     """One table serves every lock in the address space (paper §3)."""
     env = LockEnv(LiveMem(num_cpus=8))

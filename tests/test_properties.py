@@ -5,7 +5,12 @@ can drive randomized thread programs and check linearization invariants.
 """
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import LockEnv, SimMem, Topology, mix_hash
 from repro.core.table import DEFAULT_TABLE_SIZE
