@@ -1,0 +1,344 @@
+"""Device-BRAVO microbenchmark: acquire/release/revoke latency, transfer
+counts, aliasing proof, and the distributed revocation-scan collective.
+
+Measures the zero-sync fused lease path against a faithful reimplementation
+of the legacy host-looped path, and records the results (plus the 1D
+``("data",)`` and 2D ``("pod", "data")`` mesh revocation collectives on the
+512-device dry-run topology) into ``BENCH_device_bravo.json`` so the perf
+trajectory has data.
+
+    PYTHONPATH=src python -m benchmarks.device_bravo            # full, 512 dev
+    PYTHONPATH=src python -m benchmarks.device_bravo --smoke    # CI: fast,
+        # exits nonzero on any kernel-vs-ref mismatch or lost guarantee
+
+Transfer accounting: on the CPU validation backend host==device, so
+``jax.transfer_guard`` cannot flag same-device copies; instead every host
+crossing in the legacy path is routed through counting shims (each one IS a
+host-device transfer on a real accelerator), and the fused path additionally
+runs under ``jax.transfer_guard("disallow")`` — the guard that would trip on
+TPU if a sync crept in.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: tiny meshes, verify-only iterations")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=64,
+                    help="readers per batched acquire")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: repo root "
+                         "BENCH_device_bravo.json; smoke mode only writes "
+                         "when --out is given)")
+    return ap.parse_args()
+
+
+ARGS = _parse()
+if not ARGS.smoke:
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import jax                                                       # noqa: E402
+import jax.numpy as jnp                                          # noqa: E402
+import numpy as np                                               # noqa: E402
+from jax.sharding import Mesh                                    # noqa: E402
+
+from repro.core import device_bravo as DB                        # noqa: E402
+from repro.kernels import ops as K                               # noqa: E402
+from repro.kernels import ref as R                               # noqa: E402
+
+FAILURES = []
+
+
+def check(ok: bool, what: str) -> None:
+    status = "ok" if ok else "MISMATCH"
+    print(f"[{status}] {what}", flush=True)
+    if not ok:
+        FAILURES.append(what)
+
+
+def timeit(fn, iters: int) -> float:
+    """Mean wall-clock seconds per call (fn must block on completion)."""
+    fn()                                 # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+# ---------------------------------------------------------------------------
+# Legacy host-looped lease path (the pre-fusion implementation), with every
+# host crossing routed through counting shims
+# ---------------------------------------------------------------------------
+
+
+class TransferCounter:
+    def __init__(self):
+        self.h2d = 0
+        self.d2h = 0
+
+    def to_device(self, x):
+        self.h2d += 1
+        return jnp.asarray(x)
+
+    def to_host_int(self, x) -> int:
+        self.d2h += 1
+        return int(x)
+
+    def to_host_arr(self, x) -> np.ndarray:
+        self.d2h += 1
+        return np.asarray(x)
+
+    @property
+    def total(self) -> int:
+        return self.h2d + self.d2h
+
+
+def legacy_acquire(state, lock_id, reader_ids, tc: TransferCounter):
+    """The seed implementation: host rbias checks, host slot upload, host
+    granted download, full-table-copy publish kernel."""
+    if tc.to_host_int(state.rbias) == 0:
+        return state, np.zeros((len(reader_ids),), bool)
+    sl = tc.to_device(DB.slots_for(lock_id, reader_ids))
+    ids = jnp.full((len(reader_ids),), lock_id, jnp.int32)
+    table, granted = K.publish(state.table, sl, ids)
+    if tc.to_host_int(state.rbias) == 0:       # recheck (Listing 1 line 18)
+        table = K.clear(table, sl)
+        granted = jnp.zeros_like(granted)
+    import dataclasses
+    return dataclasses.replace(state, table=table), tc.to_host_arr(granted)
+
+
+def legacy_release(state, lock_id, reader_ids, tc: TransferCounter):
+    import dataclasses
+    sl = tc.to_device(DB.slots_for(lock_id, reader_ids))
+    return dataclasses.replace(state, table=K.clear(state.table, sl))
+
+
+# ---------------------------------------------------------------------------
+# Sections
+# ---------------------------------------------------------------------------
+
+
+def bench_correctness() -> dict:
+    """Kernel-vs-ref verification (the CI smoke gate)."""
+    rng = np.random.default_rng(0)
+    table = np.zeros((32, 128), np.int32)
+    occ = rng.choice(4096, 64, replace=False)
+    table.reshape(-1)[occ] = 99
+    slots = rng.integers(0, 4096, size=128).astype(np.int32)
+    slots[1] = slots[0]                       # force an in-batch collision
+    ids = rng.integers(1, 1 << 20, size=128).astype(np.int32)
+    t, s, i = jnp.asarray(table), jnp.asarray(slots), jnp.asarray(ids)
+
+    tk, gk = K.fused_publish(t, jnp.ones((), jnp.int32), s, i)
+    tr, gr = R.publish_ref(t, s, i)
+    check(np.array_equal(np.asarray(tk), np.asarray(tr))
+          and np.array_equal(np.asarray(gk), np.asarray(gr)),
+          "fused_publish == publish_ref")
+
+    tz, gz = K.fused_publish(t, jnp.zeros((), jnp.int32), s, i)
+    check(np.array_equal(np.asarray(tz), table) and not np.asarray(gz).any(),
+          "fused_publish rbias=0 -> full undo")
+
+    tc = K.fused_clear(tk, s)
+    check(np.array_equal(np.asarray(tc), np.asarray(R.clear_ref(tr, s))),
+          "fused_clear == clear_ref")
+
+    mask, cnt = K.revocation_scan(tk, 99)
+    mref, cref = R.scan_ref(tk, 99)
+    check(np.array_equal(np.asarray(mask), np.asarray(mref))
+          and int(cnt) == int(cref), "revocation_scan == scan_ref")
+    poll = int(K.revocation_poll(tk, 99))
+    check((poll == 0) == (int(cref) == 0) and poll <= int(cref),
+          "revocation_poll early-exit bound")
+
+    readers = np.arange(1000, 1000 + 64)
+    st = DB.init_state()
+    st, g = DB.acquire(st, 21, readers)
+    host_slots = DB.slots_for(21, readers)
+    flat = np.asarray(st.table).reshape(-1)
+    check(bool(np.asarray(g).all()) and (flat[host_slots] == 21).all(),
+          "device hashing == host slots_for")
+    return {"verified": len(FAILURES) == 0}
+
+
+def bench_aliasing(batch: int) -> dict:
+    """Prove the fused acquire updates the table in place: the Pallas call
+    carries input_output_aliases and the jit donates the table buffer."""
+    table = jnp.zeros((32, 128), jnp.int32)
+    grants = jnp.zeros((), jnp.int32)
+    rbias = jnp.ones((), jnp.int32)
+    rids = jnp.arange(batch, dtype=jnp.int32)
+    lh = jnp.asarray(0, jnp.uint32)
+    ll = jnp.asarray(7, jnp.uint32)
+    val = jnp.asarray(7, jnp.int32)
+    args = (table, grants, rbias, rids, lh, ll, val)
+    jaxpr = str(jax.make_jaxpr(DB._acquire_ids32_impl)(*args))
+    pallas_alias = "input_output_aliases" in jaxpr and \
+        "(0, 0)" in jaxpr.split("input_output_aliases", 1)[1][:40]
+    # jit-level donation as accelerators get it: device_bravo only requests
+    # donation on non-CPU backends (CPU ignores it), so lower an explicitly
+    # donating jit here to inspect the aliasing the TPU path compiles with
+    lowered = jax.jit(DB._acquire_ids32_impl, donate_argnums=(0, 1)).lower(
+        *args).as_text()
+    donated = "tf.aliasing_output" in lowered or \
+        "jax.buffer_donor" in lowered
+    check(pallas_alias, "fused acquire: pallas input_output_aliases {0: 0}")
+    check(donated, "fused acquire: jit-level table buffer donation")
+    return {"pallas_input_output_aliases": pallas_alias,
+            "jit_buffer_donation": donated,
+            "donation_active_backend": jax.default_backend() != "cpu"}
+
+
+def bench_transfers(batch: int) -> dict:
+    """Host-device transfers per acquire/release pair: legacy vs fused."""
+    readers = np.arange(batch)
+    tc = TransferCounter()
+    st = DB.init_state()
+    st, _ = legacy_acquire(st, 5, readers, tc)
+    st = legacy_release(st, 5, readers, tc)
+    legacy_pair = tc.total
+
+    tbl = DB.DeviceLeaseTable()
+    h = tbl.handle()
+    rids = jnp.arange(batch, dtype=jnp.int32)     # device-resident, once
+    g = h.acquire(rids)
+    h.release(rids, granted=g)                    # warmup / compile
+    guard_ok = True
+    try:
+        with jax.transfer_guard("disallow"):
+            g = h.acquire(rids)
+            h.release(rids, granted=g)            # grant-masked, as the
+            #                                       engine's steady state
+    except Exception as e:                        # pragma: no cover
+        guard_ok = False
+        print(f"  transfer_guard tripped: {e}", flush=True)
+    fused_pair = 0 if guard_ok else -1
+    check(guard_ok, "fused pair runs under jax.transfer_guard('disallow')")
+    check(legacy_pair >= 2 * max(fused_pair, 1),
+          f"transfers/pair: legacy={legacy_pair} >= 2x fused={fused_pair}")
+    return {"legacy_transfers_per_pair": legacy_pair,
+            "legacy_h2d": tc.h2d, "legacy_d2h": tc.d2h,
+            "fused_transfers_per_pair_steady": fused_pair,
+            "fused_guard_disallow_ok": guard_ok}
+
+
+def bench_latency(batch: int, iters: int) -> dict:
+    readers = np.arange(batch)
+    rids = jnp.arange(batch, dtype=jnp.int32)
+
+    tbl = DB.DeviceLeaseTable()
+    h = tbl.handle()
+
+    def fused_pair():
+        g = h.acquire(rids)
+        h.release(rids, granted=g)
+        jax.block_until_ready(tbl.state.table)
+
+    fused_s = timeit(fused_pair, iters)
+
+    st_box = {"st": DB.init_state()}
+
+    def legacy_pair():
+        tc = TransferCounter()
+        st, _ = legacy_acquire(st_box["st"], 5, readers, tc)
+        st_box["st"] = legacy_release(st, 5, readers, tc)
+        jax.block_until_ready(st_box["st"].table)
+
+    legacy_s = timeit(legacy_pair, iters)
+
+    h.acquire(rids)
+    h.release(rids)
+
+    def revoke_drained():
+        tbl.state = DB.dataclasses.replace(
+            tbl.state, rbias=jnp.ones((), jnp.int32))
+        h.revoke(pipeline_depth=2)
+
+    revoke_s = timeit(revoke_drained, max(2, iters // 8))
+    return {"batch": batch, "iters": iters,
+            "fused_pair_us": round(fused_s * 1e6, 2),
+            "legacy_pair_us": round(legacy_s * 1e6, 2),
+            "pair_speedup": round(legacy_s / fused_s, 3),
+            "revoke_drained_us": round(revoke_s * 1e6, 2)}
+
+
+def bench_collective(smoke: bool, iters: int) -> dict:
+    """Distributed revocation scan on the 1D and 2D meshes."""
+    devs = np.array(jax.devices())
+    out = {"devices": len(devs)}
+    if smoke:
+        meshes = [("1d", Mesh(devs[:1].reshape(1), ("data",)), ("data",)),
+                  ("2d", Mesh(devs[:1].reshape(1, 1), ("pod", "data")),
+                   ("pod", "data"))]
+    else:
+        if len(devs) < 512:
+            raise RuntimeError("full mode needs 512 fake devices")
+        meshes = [("1d", Mesh(devs[:256].reshape(16, 16),
+                              ("data", "model")), ("data",)),
+                  ("2d", Mesh(devs[:512].reshape(2, 16, 16),
+                              ("pod", "data", "model")), ("pod", "data"))]
+    rng = np.random.default_rng(9)
+    table = np.zeros((32, 128), np.int32)
+    hits = rng.choice(4096, 37, replace=False)
+    table.reshape(-1)[hits] = 77
+    for name, mesh, axes in meshes:
+        fn = DB.make_distributed_revoke(
+            mesh, axis=axes[0] if len(axes) == 1 else axes)
+        with mesh:
+            t = jnp.asarray(table)
+            lid = jnp.int32(77)
+            cnt = int(fn(t, lid))
+            check(cnt == 37, f"distributed revoke count on {name} "
+                             f"mesh {dict(mesh.shape)} == 37 (got {cnt})")
+            dt = timeit(lambda: jax.block_until_ready(fn(t, lid)),
+                        max(2, iters // 8))
+        out[name] = {"mesh": dict(mesh.shape), "axes": list(axes),
+                     "count_ok": cnt == 37,
+                     "scan_collective_us": round(dt * 1e6, 2)}
+    return out
+
+
+def main() -> int:
+    smoke = ARGS.smoke
+    iters = ARGS.iters or (4 if smoke else 100)
+    rec = {
+        "bench": "device_bravo",
+        "mode": "smoke" if smoke else "full",
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "correctness": bench_correctness(),
+        "aliasing": bench_aliasing(ARGS.batch),
+        "transfers": bench_transfers(ARGS.batch),
+        "latency": bench_latency(ARGS.batch, iters),
+        "collective": bench_collective(smoke, iters),
+        "failures": FAILURES,
+    }
+    out = ARGS.out
+    if out is None and not smoke:
+        out = str(Path(__file__).resolve().parents[1]
+                  / "BENCH_device_bravo.json")
+    if out:
+        Path(out).write_text(json.dumps(rec, indent=1))
+        print(f"wrote {out}", flush=True)
+    print(json.dumps(rec["latency"], indent=1))
+    if FAILURES:
+        print(f"FAILED: {FAILURES}", file=sys.stderr)
+        return 1
+    print("device-bravo bench OK", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,3 +15,8 @@ python -m pytest -x -q "$@"
 
 # lock zoo smoke (LiveMem + SimMem, every variant)
 python scripts/smoke_locks.py
+
+# device-BRAVO microbenchmark, fast smoke mode: verifies the fused/aliased
+# lease kernels against kernels/ref.py (exits nonzero on any mismatch) and
+# the 1D/2D distributed-revoke collectives on tiny meshes
+python -m benchmarks.device_bravo --smoke

@@ -5,36 +5,83 @@ lease table **sharded across devices**.  Readers (per-device serving steps)
 publish leases into their *local* table shard — zero ICI traffic, the
 analogue of CASing a private cache line.  The rare writer (weight hot-swap /
 cache compaction / elastic reconfiguration) clears a replicated ``rbias``
-flag, then revokes: all-gather the shards and run the Pallas
-``revocation_scan`` kernel (the paper's SIMD-scan future work on the VPU),
-waiting until no shard publishes the lock.
+flag, then revokes: scan the table with the Pallas ``revocation_scan``
+kernel (the paper's SIMD-scan future work on the VPU), waiting until no
+shard publishes the lock.
 
-Host-side orchestration (the ``ModelStore`` in the serving engine) drives
-this with ordinary BRAVO logic — RBias / InhibitUntil / the N=9 bound —
-while the table state and scans live on device.
+Batched lease API (the zero-sync fast path)
+-------------------------------------------
+A batch acquire or release is ONE fused, donation-aliased device program
+with no host synchronization:
+
+* slot hashing runs on device (``kernels.hash.hash_slots`` — splitmix64
+  over uint32 limb pairs, bit-exact with the host ``mix_hash``);
+* publish + rbias-recheck + conditional-undo are fused into one Pallas
+  kernel (``kernels.ops.fused_publish``) whose table block is aliased via
+  ``input_output_aliases`` — the 16KB table is updated in place, never
+  copied per call — and whose per-request CAS loop is vectorized into
+  one-hot row updates with first-occurrence collision resolution;
+* the jit wrappers donate the table (and grant-counter) buffers, so a
+  steady-state acquire/release pair moves **zero** bytes between host and
+  device (the legacy path paid two rbias reads, a slots upload per call and
+  a granted download — see ``benchmarks/device_bravo.py``).
+
+``acquire``/``release``/``revoke``/``rearm`` keep the pure-functional
+``DeviceLeaseState`` protocol (state in, state out; input table buffers are
+consumed by donation).  ``DeviceLeaseTable`` + ``LeaseHandle`` wrap that
+protocol for concurrent host threads (the serving engine routes its
+``ModelStore``/``PageTable`` epoch reads through handles).
+
+Revocation
+----------
+``revoke`` clears ``rbias`` on device, then drains by *pipelining*
+early-exit polls (``kernels.ops.revocation_poll``): up to ``pipeline_depth``
+scans are in flight at once with their counts prefetched via
+``copy_to_host_async``, so the writer blocks on at most one transfer per
+decision instead of one round-trip per scan.
+
+Multi-pod revocation pattern
+----------------------------
+``make_distributed_revoke`` shards the table's rows over any prefix of the
+data axes — ``"data"`` on a single pod, ``("pod", "data")`` on the 512-chip
+multi-pod mesh — and reduces each device's local match count with
+``dist.sharding.hierarchical_psum``: psum over the ICI ``"data"`` axis
+first (within pod), then over the slow DCN ``"pod"`` axis, so the cross-pod
+fabric carries one scalar per pod rather than an all-gather of 16KB table
+shards.  Host-side orchestration (the ``ModelStore`` in the serving engine)
+drives this with ordinary BRAVO logic — RBias / InhibitUntil / the N=9
+bound — while the table state and scans live on device.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
+import threading
 import time
-from typing import Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..dist.sharding import hierarchical_psum, shard_map_compat
+from ..kernels import hash as H
 from ..kernels import ops as K
 from .bravo import DEFAULT_N
-from .table import mix_hash
-from ..dist.sharding import shard_map_compat
+from .table import mix_hash_vec, next_lock_id
+from .table import mix_hash  # noqa: F401  (re-export: scalar host oracle)
 
 TABLE_SLOTS = 4096
 
 
 @dataclasses.dataclass
 class DeviceLeaseState:
-    """Pure functional state: pass through acquire/release/revoke."""
+    """Pure functional state: pass through acquire/release/revoke.
+
+    The ``table`` buffer is *consumed* (donated) by acquire/release; always
+    continue from the returned state."""
     table: jax.Array          # (rows, 128) int32
     rbias: jax.Array          # () int32
     inhibit_until_ns: int     # host clock (ns)
@@ -50,59 +97,195 @@ def init_state(slots: int = TABLE_SLOTS) -> DeviceLeaseState:
 
 def slots_for(lock_id: int, reader_ids: np.ndarray,
               slots: int = TABLE_SLOTS) -> np.ndarray:
-    return np.array([mix_hash(lock_id, int(r)) & (slots - 1)
-                     for r in reader_ids], np.int32)
+    """Host-side slot computation (vectorized; no Python loop)."""
+    h = mix_hash_vec(lock_id, np.asarray(reader_ids, np.uint64))
+    return (h & np.uint64(slots - 1)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fused device programs (hash + publish/clear in one dispatch, no sync)
+# ---------------------------------------------------------------------------
+
+
+def _lock_limbs(lock_id: int):
+    hi, lo = H.split64(lock_id)
+    return jnp.asarray(hi, jnp.uint32), jnp.asarray(lo, jnp.uint32)
+
+
+def _reader_limbs_host(reader_ids) -> Tuple[jax.Array, jax.Array]:
+    ids = np.asarray(reader_ids).astype(np.uint64)
+    return (jnp.asarray((ids >> np.uint64(32)).astype(np.uint32)),
+            jnp.asarray(ids.astype(np.uint32)))
+
+
+def _acquire_impl(table, grants, rbias, lh, ll, th, tl, val):
+    n_slots = table.shape[0] * table.shape[1]
+    slots = H.hash_slots(lh, ll, th, tl, n_slots)
+    ids = jnp.full(tl.shape, 0, jnp.int32) + val
+    table, granted = K.fused_publish(table, rbias, slots, ids)
+    return table, grants + jnp.sum(granted.astype(jnp.int32)), granted
+
+
+def _acquire_ids32_impl(table, grants, rbias, reader_ids, lh, ll, val):
+    """Device-resident int32 reader ids (the engine path): limbs in-graph."""
+    tl = reader_ids.astype(jnp.uint32)
+    return _acquire_impl(table, grants, rbias, lh, ll,
+                         jnp.zeros_like(tl), tl, val)
+
+
+def _release_impl(table, lh, ll, th, tl, granted):
+    n_slots = table.shape[0] * table.shape[1]
+    slots = H.hash_slots(lh, ll, th, tl, n_slots)
+    # releasing a lease one never held must not wipe another reader's slot:
+    # mask denied requests to slot -1, which the one-hot selectors in the
+    # clear kernel match against no row at all
+    slots = jnp.where(granted, slots, -1)
+    return K.fused_clear(table, slots)
+
+
+def _release_ids32_impl(table, reader_ids, lh, ll, granted):
+    tl = reader_ids.astype(jnp.uint32)
+    return _release_impl(table, lh, ll, jnp.zeros_like(tl), tl, granted)
+
+
+def _release_all_impl(table, lh, ll, th, tl):
+    """Unmasked release (caller held every lease): the all-granted mask is
+    materialized in-graph so the zero-sync path stays transfer-free."""
+    return _release_impl(table, lh, ll, th, tl,
+                         jnp.ones(tl.shape, jnp.bool_))
+
+
+def _release_ids32_all_impl(table, reader_ids, lh, ll):
+    tl = reader_ids.astype(jnp.uint32)
+    return _release_all_impl(table, lh, ll, jnp.zeros_like(tl), tl)
+
+
+class _Programs(NamedTuple):
+    acquire_limbs: Callable
+    acquire_ids32: Callable
+    release_limbs: Callable
+    release_ids32: Callable
+    release_all_limbs: Callable
+    release_all_ids32: Callable
+
+
+@functools.lru_cache(maxsize=None)
+def _programs() -> _Programs:
+    """jit the fused programs once, donating the table/grants buffers only
+    on backends that implement donation (CPU — the validation backend —
+    would ignore it and warn on every compile)."""
+    donating = jax.default_backend() != "cpu"
+
+    def jit(fn, n_donated):
+        return jax.jit(fn, donate_argnums=tuple(range(n_donated))
+                       if donating else ())
+
+    return _Programs(
+        acquire_limbs=jit(_acquire_impl, 2),
+        acquire_ids32=jit(_acquire_ids32_impl, 2),
+        release_limbs=jit(_release_impl, 1),
+        release_ids32=jit(_release_ids32_impl, 1),
+        release_all_limbs=jit(_release_all_impl, 1),
+        release_all_ids32=jit(_release_ids32_all_impl, 1))
+
+
+# ---------------------------------------------------------------------------
+# Pure-functional protocol (Listing 1, batched)
+# ---------------------------------------------------------------------------
 
 
 def acquire(state: DeviceLeaseState, lock_id: int,
-            reader_ids: np.ndarray) -> Tuple[DeviceLeaseState, np.ndarray]:
+            reader_ids) -> Tuple[DeviceLeaseState, jax.Array]:
     """Fast-path batch acquire: publish leases for ``reader_ids``.
 
-    Returns the granted mask; callers fall back to the slow path (the host
-    lock on the underlying structure) for readers whose CAS failed or when
-    rbias is clear — exactly Listing 1's control flow, batched."""
-    if int(state.rbias) == 0:
-        return state, np.zeros((len(reader_ids),), bool)
-    sl = jnp.asarray(slots_for(lock_id, reader_ids))
-    ids = jnp.full((len(reader_ids),), lock_id, jnp.int32)
-    table, granted = K.publish(state.table, sl, ids)
-    # recheck rbias after publishing (Listing 1 line 18)
-    if int(state.rbias) == 0:
-        table = K.clear(table, sl)
-        granted = jnp.zeros_like(granted)
-    return dataclasses.replace(state, table=table), np.asarray(granted)
+    One fused device program — hashing, publish, rbias recheck and the
+    conditional undo all run in kernel; nothing blocks on the host.
+    Returns the granted mask (device-resident); callers fall back to the
+    slow path (the host lock on the underlying structure) for readers whose
+    CAS failed or when rbias is clear — exactly Listing 1's control flow,
+    batched."""
+    lh, ll = _lock_limbs(lock_id)
+    th, tl = _reader_limbs_host(reader_ids)
+    table, _, granted = _programs().acquire_limbs(
+        state.table, jnp.zeros((), jnp.int32), state.rbias, lh, ll, th, tl,
+        jnp.asarray(lock_id, jnp.int32))
+    return dataclasses.replace(state, table=table), granted
 
 
-def release(state: DeviceLeaseState, lock_id: int,
-            reader_ids: np.ndarray) -> DeviceLeaseState:
-    sl = jnp.asarray(slots_for(lock_id, reader_ids))
-    return dataclasses.replace(state, table=K.clear(state.table, sl))
+def release(state: DeviceLeaseState, lock_id: int, reader_ids,
+            granted: Optional[jax.Array] = None) -> DeviceLeaseState:
+    """Clear the leases for ``reader_ids``.  Pass the ``granted`` mask from
+    acquire when the grant may have been partial — readers that were denied
+    must not clear the (other reader's) slot they collided into."""
+    lh, ll = _lock_limbs(lock_id)
+    th, tl = _reader_limbs_host(reader_ids)
+    if granted is None:
+        table = _programs().release_all_limbs(state.table, lh, ll, th, tl)
+    else:
+        table = _programs().release_limbs(state.table, lh, ll, th, tl,
+                                          granted)
+    return dataclasses.replace(state, table=table)
+
+
+def _prefetch(x: jax.Array) -> None:
+    try:
+        x.copy_to_host_async()
+    except AttributeError:      # older runtimes: int() below still works
+        pass
+
+
+def _drain(dispatch_poll: Callable[[jax.Array], jax.Array], lock_id, *,
+           wait_poll_s: float, max_wait_s: float,
+           pipeline_depth: int) -> int:
+    """Poll the early-exit scan until no slot publishes ``lock_id``.
+
+    Keeps up to ``pipeline_depth`` scans in flight with async count
+    transfers, so the writer never blocks one full host round-trip per
+    scan.  ``dispatch_poll(lid)`` must enqueue one scan of the *current*
+    table and return the count array — concurrent callers (the lease-table
+    wrapper) dispatch under their own mutex so the scan is ordered before
+    any later donation of that table buffer.  Returns the number of scans
+    dispatched."""
+    lid = jnp.asarray(lock_id, jnp.int32)
+    inflight: collections.deque = collections.deque()
+    scans = 0
+    deadline = time.monotonic() + max_wait_s
+    while True:
+        while len(inflight) < pipeline_depth:
+            cnt = dispatch_poll(lid)
+            _prefetch(cnt)
+            inflight.append(cnt)
+            scans += 1
+        if int(inflight.popleft()) == 0:
+            return scans
+        if time.monotonic() > deadline:
+            held = int(dispatch_poll(lid))
+            raise TimeoutError(f"lease revocation stuck: >={held} held")
+        time.sleep(wait_poll_s)
 
 
 def revoke(state: DeviceLeaseState, lock_id: int, *,
            n: int = DEFAULT_N,
            wait_poll_s: float = 0.0005,
-           max_wait_s: float = 5.0) -> Tuple[DeviceLeaseState, int]:
+           max_wait_s: float = 5.0,
+           pipeline_depth: int = 2,
+           table_source: Optional[Callable[[], jax.Array]] = None,
+           ) -> Tuple[DeviceLeaseState, int]:
     """Writer-side revocation: clear rbias, scan, wait for leases to drain.
 
     Returns (state', scan_count) and sets InhibitUntil per the primum-non-
-    nocere policy.  The scans use the Pallas kernel; waiting polls the scan
-    (fast-path readers clear their own slots on release)."""
+    nocere policy.  ``table_source`` lets a live caller (DeviceLeaseTable)
+    expose the freshest table to the poll loop; the default polls the
+    snapshot in ``state``."""
     state = dataclasses.replace(state, rbias=jnp.zeros((), jnp.int32))
+    get_table = table_source or (lambda: state.table)
     start = time.monotonic_ns()
-    scans = 0
-    deadline = time.monotonic() + max_wait_s
-    while True:
-        _, count = K.revocation_scan(state.table, lock_id)
-        scans += 1
-        if int(count) == 0:
-            break
-        if time.monotonic() > deadline:
-            raise TimeoutError(f"lease revocation stuck: {int(count)} held")
-        time.sleep(wait_poll_s)
+    scans = _drain(lambda lid: K.revocation_poll(get_table(), lid), lock_id,
+                   wait_poll_s=wait_poll_s, max_wait_s=max_wait_s,
+                   pipeline_depth=pipeline_depth)
     now = time.monotonic_ns()
-    state.inhibit_until_ns = now + (now - start) * n
-    return state, scans
+    return dataclasses.replace(
+        state, inhibit_until_ns=now + (now - start) * n), scans
 
 
 def rearm(state: DeviceLeaseState) -> DeviceLeaseState:
@@ -114,24 +297,160 @@ def rearm(state: DeviceLeaseState) -> DeviceLeaseState:
 
 
 # ---------------------------------------------------------------------------
-# Multi-device revocation (dry-run/demo of the collective pattern)
+# Concurrent wrapper: one shared table, many host threads
 # ---------------------------------------------------------------------------
 
 
-def make_distributed_revoke(mesh, axis: str = "data"):
-    """Each device holds a table shard; the writer all-gathers the shards
-    and scans.  Returns a jitted fn (sharded_table, lock_id) -> count."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+class DeviceLeaseTable:
+    """Thread-safe owner of one device lease table.
+
+    The mutex only guards the host-side state swap; each operation is one
+    fused device dispatch, so contention is bounded by dispatch cost, not
+    device round-trips.  Grant counts accumulate *on device* and are only
+    fetched by :meth:`stats`."""
+
+    def __init__(self, slots: int = TABLE_SLOTS):
+        self.state = init_state(slots)
+        self._mu = threading.Lock()
+        self._grants = jnp.zeros((), jnp.int32)
+        self._armed = True        # host shadow of rbias: rearm() no-ops
+        self._revoking = 0        # writers mid-drain: rearm() must wait
+        self.publishes = 0        # batches dispatched (host counter)
+        self.revocations = 0
+
+    def handle(self, lock_id: Optional[int] = None) -> "LeaseHandle":
+        return LeaseHandle(self, lock_id or next_lock_id())
+
+    # -- readers ------------------------------------------------------------
+    def acquire(self, lh, ll, val, reader_ids: jax.Array) -> jax.Array:
+        """Publish leases for device-resident int32 ``reader_ids``; returns
+        the granted mask without synchronizing."""
+        with self._mu:
+            table, grants, granted = _programs().acquire_ids32(
+                self.state.table, self._grants, self.state.rbias,
+                reader_ids, lh, ll, val)
+            self.state = dataclasses.replace(self.state, table=table)
+            self._grants = grants
+            self.publishes += 1
+        return granted
+
+    def release(self, lh, ll, reader_ids: jax.Array,
+                granted: Optional[jax.Array] = None) -> None:
+        """Clear leases; pass acquire's ``granted`` mask so readers that
+        were *denied* never clear the slot they collided into."""
+        with self._mu:
+            if granted is None:
+                table = _programs().release_all_ids32(
+                    self.state.table, reader_ids, lh, ll)
+            else:
+                table = _programs().release_ids32(
+                    self.state.table, reader_ids, lh, ll, granted)
+            self.state = dataclasses.replace(self.state, table=table)
+
+    # -- the writer ---------------------------------------------------------
+    def revoke(self, lock_id: int, *, n: int = DEFAULT_N,
+               wait_poll_s: float = 0.0005, max_wait_s: float = 5.0,
+               pipeline_depth: int = 2) -> int:
+        with self._mu:
+            self.state = dataclasses.replace(
+                self.state, rbias=jnp.zeros((), jnp.int32))
+            self._armed = False
+            self._revoking += 1     # gate rearm() for the whole drain
+            self.revocations += 1
+
+        def poll_live(lid):
+            # dispatch under the mutex: the scan is enqueued on the current
+            # table buffer BEFORE any later acquire/release can donate it
+            with self._mu:
+                return K.revocation_poll(self.state.table, lid)
+
+        try:
+            start = time.monotonic_ns()
+            scans = _drain(poll_live, lock_id, wait_poll_s=wait_poll_s,
+                           max_wait_s=max_wait_s,
+                           pipeline_depth=pipeline_depth)
+            now = time.monotonic_ns()
+            with self._mu:
+                self.state = dataclasses.replace(
+                    self.state, inhibit_until_ns=now + (now - start) * n)
+        finally:
+            with self._mu:
+                self._revoking -= 1
+        return scans
+
+    def rearm(self) -> bool:
+        with self._mu:
+            if self._armed:
+                return True               # no dispatch on the hot path
+            if self._revoking:
+                return False              # never re-bias under a drain
+            if time.monotonic_ns() >= self.state.inhibit_until_ns:
+                self.state = dataclasses.replace(
+                    self.state, rbias=jnp.ones((), jnp.int32))
+                self._armed = True
+                return True
+        return False
+
+    def stats(self) -> dict:
+        """The only host-synchronizing read; call off the hot path."""
+        with self._mu:
+            return {"publishes": self.publishes,
+                    "grants": int(self._grants),
+                    "revocations": self.revocations,
+                    "rbias": int(self.state.rbias)}
+
+
+class LeaseHandle:
+    """One lock's view of a :class:`DeviceLeaseTable`: caches the device-
+    resident lock-id limbs so the steady state transfers nothing."""
+
+    def __init__(self, table: DeviceLeaseTable, lock_id: int):
+        self.table = table
+        self.lock_id = lock_id
+        self._lh, self._ll = _lock_limbs(lock_id)
+        self._val = jnp.asarray(lock_id, jnp.int32)
+
+    def acquire(self, reader_ids: jax.Array) -> jax.Array:
+        return self.table.acquire(self._lh, self._ll, self._val, reader_ids)
+
+    def release(self, reader_ids: jax.Array,
+                granted: Optional[jax.Array] = None) -> None:
+        self.table.release(self._lh, self._ll, reader_ids, granted=granted)
+
+    def revoke(self, **kw) -> int:
+        return self.table.revoke(self.lock_id, **kw)
+
+    def rearm(self) -> bool:
+        return self.table.rearm()
+
+
+# ---------------------------------------------------------------------------
+# Multi-device revocation (the collective pattern; see module docstring)
+# ---------------------------------------------------------------------------
+
+
+def make_distributed_revoke(mesh, axis="data"):
+    """Each device scans its local table shard; partial counts reduce
+    hierarchically (psum innermost/ICI axis first, outermost/DCN last).
+
+    ``axis`` is a mesh axis name or an outermost-first tuple of them, e.g.
+    ``("pod", "data")`` on the multi-pod mesh.  The table's leading (row)
+    dim is sharded over the product of those axes.  Returns a jitted fn
+    ``(sharded_table, lock_id) -> count`` (count replicated)."""
+    from jax.sharding import PartitionSpec as P
+
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    missing = [a for a in axes if a not in mesh.axis_names]
+    assert not missing, f"mesh {mesh.axis_names} lacks axes {missing}"
 
     def rev(table_sharded, lock_id):
         def body(shard, lid):
-            full = jax.lax.all_gather(shard, axis, axis=0, tiled=True)
-            m = (full == lid).astype(jnp.int32)
-            return jnp.sum(m)
+            local = jnp.sum((shard == lid).astype(jnp.int32))
+            return hierarchical_psum(local, axes)
 
         return shard_map_compat(
             body, mesh=mesh,
-            in_specs=(P(axis, None), P()), out_specs=P(),
+            in_specs=(P(axes, None), P()), out_specs=P(),
             check_vma=False)(table_sharded, lock_id)
 
     return jax.jit(rev)

@@ -6,7 +6,11 @@ handed out by :func:`next_lock_id`; real systems store the lock address —
 ints keep CAS trivial in both memory backends).
 
 The hash mixes the lock identity with the calling thread's identity
-(paper Listing 1 line 13) via a splitmix64-style finalizer.
+(paper Listing 1 line 13) via a splitmix64-style finalizer.  Three
+implementations exist, all bit-exact: the scalar :func:`mix_hash` here (the
+host lock fast path), the vectorized :func:`mix_hash_vec` (numpy uint64,
+used by ``device_bravo.slots_for``), and the uint32 limb-pair variant in
+``repro.kernels.hash`` that runs *inside* the fused device programs.
 """
 
 from __future__ import annotations
@@ -17,7 +21,8 @@ from typing import List
 
 from .atomics import AtomicArray, Cell, Mem
 
-__all__ = ["VisibleReadersTable", "next_lock_id", "mix_hash"]
+__all__ = ["VisibleReadersTable", "next_lock_id", "mix_hash",
+           "mix_hash_vec"]
 
 _lock_ids = itertools.count(1)
 _lock_id_guard = threading.Lock()
@@ -45,6 +50,14 @@ def mix_hash(lock_id: int, thread_id: int) -> int:
     x = (x * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
     x ^= x >> 31
     return x
+
+
+def mix_hash_vec(lock_id: int, thread_ids) -> "np.ndarray":
+    """Vectorized :func:`mix_hash` over a thread-id vector — no Python
+    loop.  Delegates to the numpy uint64 oracle in ``repro.kernels.hash``
+    (which also houses the uint32 limb variant the device kernels use)."""
+    from ..kernels.hash import mix_hash_u64
+    return mix_hash_u64(lock_id, thread_ids)
 
 
 class VisibleReadersTable:

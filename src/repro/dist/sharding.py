@@ -74,7 +74,7 @@ from jax.sharding import PartitionSpec as P
 __all__ = [
     "MeshRules", "logical_to_spec", "param_specs", "cache_specs",
     "zero1_specs", "batch_spec", "constrain", "constrain_layer_params",
-    "axis_size", "shard_map_compat",
+    "axis_size", "shard_map_compat", "hierarchical_psum",
 ]
 
 
@@ -366,6 +366,22 @@ def axis_size(name: str):
     if ax is not None:
         return ax(name)
     return jax.lax.psum(1, name)
+
+
+def hierarchical_psum(x, axes: Sequence[str]):
+    """Topology-aware all-reduce: psum one mesh axis at a time, innermost
+    (fastest interconnect) first.
+
+    ``axes`` is ordered outermost-first, matching mesh axis order — e.g.
+    ``("pod", "data")`` reduces within each pod over the ICI "data" axis,
+    then combines the per-pod partials over the slow DCN "pod" axis.  A
+    single psum over ``("pod", "data")`` would let the compiler pick one
+    flat all-reduce spanning both fabrics; staging it keeps the cross-pod
+    step down to one scalar/partial per pod (the RMA-locks distribution
+    pattern).  Inside ``shard_map`` only."""
+    for a in reversed(tuple(axes)):
+        x = jax.lax.psum(x, a)
+    return x
 
 
 def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):

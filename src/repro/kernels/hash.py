@@ -1,0 +1,142 @@
+"""Vectorized splitmix64 slot hashing (device-resident ``slots_for``).
+
+The host path computes ``mix_hash(lock_id, reader_id) & (slots - 1)`` one
+reader at a time in Python (``core.table.mix_hash``).  The device-BRAVO fast
+path must hash a whole reader-id vector *inside* the fused acquire program —
+no Python loop, no host round-trip — so the finalizer is re-expressed here
+over uint32 limb pairs (the default jax configuration disables x64, and TPUs
+have no native 64-bit integer lanes anyway).
+
+Two implementations, verified bit-exact against each other and against the
+scalar ``core.table.mix_hash``:
+
+* ``mix_hash_u64`` — numpy ``uint64`` vectorized host oracle (no loop);
+* ``mix_hash_limbs`` / ``hash_slots`` — uint32 limb-pair math written with
+  plain operators only, so the same code runs on ``jnp`` arrays inside
+  jit/Pallas programs and on host ``np.uint32`` arrays.
+
+Limb-math inputs MUST already be uint32 arrays (numpy or jax); Python ints
+do not wrap mod 2**32 and would silently compute the wrong hash.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["mix_hash_u64", "mix_hash_limbs", "hash_slots", "split64",
+           "MASK32"]
+
+MASK32 = 0xFFFFFFFF
+
+# splitmix64 constants (and their (hi, lo) uint32 limbs)
+_K1 = 0x9E3779B97F4A7C15
+_K2 = 0xBF58476D1CE4E5B9
+_K3 = 0x94D049BB133111EB
+_C1 = ((_K1 >> 32) & MASK32, _K1 & MASK32)
+_C2 = ((_K2 >> 32) & MASK32, _K2 & MASK32)
+_C3 = ((_K3 >> 32) & MASK32, _K3 & MASK32)
+
+
+def split64(x: int) -> Tuple[int, int]:
+    """Python int -> (hi, lo) uint32 limb values."""
+    x &= 0xFFFFFFFFFFFFFFFF
+    return (x >> 32) & MASK32, x & MASK32
+
+
+# ---------------------------------------------------------------------------
+# Host oracle: plain numpy uint64 (vectorized, no Python loop)
+# ---------------------------------------------------------------------------
+
+
+def mix_hash_u64(lock_id: int, thread_ids: np.ndarray) -> np.ndarray:
+    """Vectorized ``core.table.mix_hash`` over a reader-id vector."""
+    t = np.asarray(thread_ids).astype(np.uint64)
+    x = np.uint64(lock_id * _K1 & 0xFFFFFFFFFFFFFFFF) + t * _K2
+    x ^= x >> np.uint64(30)
+    x *= np.uint64(_K2)
+    x ^= x >> np.uint64(27)
+    x *= np.uint64(_K3)
+    x ^= x >> np.uint64(31)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Device path: uint32 limb pairs (np/jnp agnostic; plain operators only)
+# ---------------------------------------------------------------------------
+
+
+def _mul32_wide(a, b):
+    """32x32 -> 64 bit product as (hi, lo) uint32 limbs (16-bit partials)."""
+    a0 = a & 0xFFFF
+    a1 = a >> 16
+    b0 = b & 0xFFFF
+    b1 = b >> 16
+    p00 = a0 * b0
+    p01 = a0 * b1
+    p10 = a1 * b0
+    p11 = a1 * b1
+    mid = (p00 >> 16) + (p01 & 0xFFFF) + (p10 & 0xFFFF)
+    lo = (p00 & 0xFFFF) | ((mid & 0xFFFF) << 16)
+    hi = p11 + (p01 >> 16) + (p10 >> 16) + (mid >> 16)
+    return hi, lo
+
+
+def _mul64(ah, al, bh, bl):
+    """(a * b) mod 2**64 over uint32 limbs."""
+    hi, lo = _mul32_wide(al, bl)
+    hi = hi + al * bh + ah * bl          # wraps mod 2**32, as required
+    return hi, lo
+
+
+def _add64(ah, al, bh, bl):
+    lo = al + bl
+    carry = (lo < al).astype(lo.dtype)
+    return ah + bh + carry, lo
+
+
+def _mul64_const(ah, al, c: Tuple[int, int]):
+    ch = al * 0 + np.uint32(c[0])        # const limbs in the inputs' backend
+    cl = al * 0 + np.uint32(c[1])
+    return _mul64(ah, al, ch, cl)
+
+
+def _shr64_xor(h, l, k: int):
+    """x ^= x >> k, for 0 < k < 32 (splitmix64 uses 30, 27, 31)."""
+    sl = (l >> k) | (h << (32 - k))
+    sh = h >> k
+    return h ^ sh, l ^ sl
+
+
+def mix_hash_limbs(lock_hi, lock_lo, tid_hi, tid_lo):
+    """splitmix64 finalizer over (lock, thread) limb pairs -> (hi, lo).
+
+    Bit-exact with ``core.table.mix_hash``:
+        x = lock*K1 + tid*K2 ; x ^= x>>30 ; x *= K2 ; x ^= x>>27
+        x *= K3 ; x ^= x>>31
+
+    All four inputs must be uint32 arrays (numpy or jax); the lock limbs
+    broadcast against the reader-id vectors.
+    """
+    ah, al = _mul64_const(lock_hi, lock_lo, _C1)
+    bh, bl = _mul64_const(tid_hi, tid_lo, _C2)
+    h, l = _add64(ah, al, bh, bl)
+    h, l = _shr64_xor(h, l, 30)
+    h, l = _mul64_const(h, l, _C2)
+    h, l = _shr64_xor(h, l, 27)
+    h, l = _mul64_const(h, l, _C3)
+    h, l = _shr64_xor(h, l, 31)
+    return h, l
+
+
+def hash_slots(lock_hi, lock_lo, tid_hi, tid_lo, n_slots: int):
+    """Vectorized ``slots_for``: -> int32 slot indices in ``[0, n_slots)``.
+
+    ``n_slots`` must be a power of two <= 2**31 so the mask only needs the
+    low limb.  Inputs broadcast (scalar limbs for the lock, vector limbs for
+    the readers).
+    """
+    assert n_slots > 0 and (n_slots & (n_slots - 1)) == 0, n_slots
+    _, lo = mix_hash_limbs(lock_hi, lock_lo, tid_hi, tid_lo)
+    return (lo & (n_slots - 1)).astype("int32")

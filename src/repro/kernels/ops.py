@@ -10,10 +10,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .table_publish import _publish_call
-from .table_scan import LANES, _scan_call
+from .table_publish import _fused_publish_call, _publish_call
+from .table_scan import LANES, _poll_call, _scan_call
 
-__all__ = ["as_table2d", "revocation_scan", "publish", "clear", "LANES"]
+__all__ = ["as_table2d", "revocation_scan", "revocation_poll", "publish",
+           "clear", "fused_publish", "fused_clear", "LANES"]
 
 
 def _interpret() -> bool:
@@ -45,3 +46,37 @@ def clear(table2d: jax.Array, slots: jax.Array) -> jax.Array:
     out, _ = _publish_call(table2d, slots, zeros, interpret=_interpret(),
                            unconditional=True)
     return out
+
+
+# --------------------------------------------------------------------------
+# Fused/aliased fast path (device-BRAVO): the table buffer is donated into
+# the kernel (``input_output_aliases``) — no per-call 16KB copy — and the
+# rbias recheck + conditional undo happen in kernel, so callers never sync.
+# --------------------------------------------------------------------------
+
+
+def fused_publish(table2d: jax.Array, rbias: jax.Array, slots: jax.Array,
+                  ids: jax.Array):
+    """Vectorized batched CAS(0 -> id), masked by ``rbias != 0`` in kernel.
+
+    -> (new table [in place], granted bool (M,)).  The input table buffer is
+    consumed (aliased); callers must use the returned array."""
+    return _fused_publish_call(table2d, rbias, slots, ids,
+                               interpret=_interpret(), unconditional=False,
+                               check_rbias=True)
+
+
+def fused_clear(table2d: jax.Array, slots: jax.Array) -> jax.Array:
+    """Release: store 0 into each slot, in place (aliased, unconditional)."""
+    zeros = jnp.zeros_like(slots, jnp.int32)
+    out, _ = _fused_publish_call(table2d, jnp.ones((), jnp.int32), slots,
+                                 zeros, interpret=_interpret(),
+                                 unconditional=True, check_rbias=False)
+    return out
+
+
+def revocation_poll(table2d: jax.Array, lock_id) -> jax.Array:
+    """Early-exit drain poll: 0 iff no slot publishes ``lock_id``; otherwise
+    a positive lower bound on the hold count (see ``_poll_kernel``)."""
+    return _poll_call(table2d, jnp.asarray(lock_id, table2d.dtype),
+                      interpret=_interpret())

@@ -1,15 +1,30 @@
-"""Pallas TPU kernel: batched visible-readers-table publish (CAS emulation).
+"""Pallas TPU kernels: batched visible-readers-table publish (CAS emulation).
 
 The reader fast path CASes ``table[slot]: 0 -> lock_id`` (paper Listing 1
 line 14).  The device-side lease table acquires many leases per engine step;
-this kernel applies a *batch* of publish requests with the same semantics as
+these kernels apply a *batch* of publish requests with the same semantics as
 a sequence of CASes: the first request targeting a free slot wins, later
 requests for the same slot (and requests for occupied slots) fail.
 
-Single grid step; the whole table block lives in VMEM (4096 slots = 16KB).
-The request loop is a ``fori_loop`` of dynamic single-element loads/stores —
-latency-bound but tiny (M <= a few hundred).  ``unconditional=True`` turns
-the kernel into the *release* path (store 0 / overwrite regardless).
+Two generations live here:
+
+``_publish_call`` (legacy)
+    Single grid step; the request loop is a ``fori_loop`` of dynamic
+    single-element loads/stores — latency-bound, and the table block is
+    copied input -> output on every call.
+
+``_fused_publish_call`` (the device-BRAVO hot path)
+    Fully vectorized one-hot formulation: gather the current slot values
+    with two one-hot matmuls, resolve in-batch collisions with a
+    first-occurrence mask (exactly sequential-CAS semantics, including
+    duplicate slots), and scatter the winners back as a rank-1-per-request
+    matmul update.  The publish + rbias-recheck + conditional-undo of paper
+    Listing 1 lines 14-22 are fused into the one kernel: the undo branch
+    lowers to masking the update delta with ``rbias != 0``.  The table
+    block is donated via ``input_output_aliases={0: 0}`` so the 16KB table
+    is updated in place instead of copied per call; ``unconditional=True``
+    is the release path (store ``ids`` regardless of occupancy — with 0 ids
+    that clears the slots).
 """
 
 from __future__ import annotations
@@ -73,5 +88,98 @@ def _publish_call(table2d: jax.Array, slots: jax.Array, ids: jax.Array,
         ],
         interpret=interpret,
     )(table2d, slots.reshape(1, m).astype(jnp.int32),
+      ids.reshape(1, m).astype(table2d.dtype))
+    return table_out, granted[0].astype(jnp.bool_)
+
+
+# ---------------------------------------------------------------------------
+# Fused, aliased, vectorized publish (the zero-sync fast path)
+# ---------------------------------------------------------------------------
+
+
+def _fused_publish_kernel(table_ref, rbias_ref, slots_ref, ids_ref,
+                          out_table_ref, granted_ref, *,
+                          unconditional: bool, check_rbias: bool):
+    table = table_ref[...]                       # (rows, LANES) int32
+    rows = table.shape[0]
+    slots = slots_ref[0, :]                      # (M,) int32
+    ids = ids_ref[0, :]
+    m = slots.shape[0]
+    r_idx = slots // LANES
+    c_idx = slots % LANES
+
+    # one-hot row/col selectors; each request is a rank-1 (row x col) update
+    oh_r = (r_idx[:, None]
+            == jax.lax.broadcasted_iota(jnp.int32, (m, rows), 1)
+            ).astype(jnp.int32)                  # (M, rows)
+    oh_c = (c_idx[:, None]
+            == jax.lax.broadcasted_iota(jnp.int32, (m, LANES), 1)
+            ).astype(jnp.int32)                  # (M, LANES)
+
+    # sequential-CAS collision semantics: first request per slot wins
+    order = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)   # row = request
+    dup_earlier = (slots[None, :] == slots[:, None]) \
+        & (order.T < order)                      # [i, j]: j < i, same slot
+    first = ~jnp.any(dup_earlier, axis=1)        # (M,)
+
+    if unconditional:
+        win = first                              # release / forced store
+    else:
+        # current occupancy, gathered via the same one-hots (VPU/MXU only,
+        # no per-request dynamic loads)
+        cur = jnp.sum(jnp.dot(oh_r, table) * oh_c, axis=1)   # (M,)
+        win = first & (cur == 0)
+
+    if check_rbias:
+        # publish + recheck-rbias + conditional undo (Listing 1 lines
+        # 14-22), fused: an undone publish is a publish whose delta never
+        # lands, so mask the winners with the bias flag read *in kernel*.
+        win = win & (rbias_ref[0, 0] != 0)
+
+    winv = win.astype(jnp.int32)
+    delta = jnp.dot((oh_r * winv[:, None]).T, oh_c * ids[:, None])
+    if unconditional:
+        occ = jnp.dot((oh_r * winv[:, None]).T, oh_c)        # 0/1: touched
+        out_table_ref[...] = table * (1 - occ) + delta
+    else:
+        out_table_ref[...] = table + delta       # winners hit free slots
+    granted_ref[0, :] = win.astype(jnp.int8)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "unconditional",
+                                    "check_rbias"))
+def _fused_publish_call(table2d: jax.Array, rbias: jax.Array,
+                        slots: jax.Array, ids: jax.Array,
+                        interpret: bool = False, unconditional: bool = False,
+                        check_rbias: bool = True):
+    """-> (new table [aliased onto the input buffer], granted bool (M,))."""
+    rows, lanes = table2d.shape
+    assert lanes == LANES, table2d.shape
+    m = slots.shape[0]
+    kern = functools.partial(_fused_publish_kernel,
+                             unconditional=unconditional,
+                             check_rbias=check_rbias)
+    table_out, granted = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), table2d.dtype),
+            jax.ShapeDtypeStruct((1, m), jnp.int8),
+        ],
+        input_output_aliases={0: 0},     # table updated in place, no copy
+        interpret=interpret,
+    )(table2d, rbias.reshape(1, 1).astype(jnp.int32),
+      slots.reshape(1, m).astype(jnp.int32),
       ids.reshape(1, m).astype(table2d.dtype))
     return table_out, granted[0].astype(jnp.bool_)

@@ -62,3 +62,42 @@ def _scan_call(table2d: jax.Array, lock_id: jax.Array,
         interpret=interpret,
     )(lock, table2d)
     return mask, count[0, 0]
+
+
+def _poll_kernel(lock_ref, table_ref, count_ref):
+    """Early-exit variant: a drain-polling writer only needs zero/nonzero.
+
+    TPU grid steps run sequentially on a core, so once an earlier block has
+    found a match every later step skips its compare entirely — the common
+    "table still held" poll touches only a prefix of the table.  The count
+    returned is exact when zero and a lower bound (>= 1) otherwise.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        count_ref[0, 0] = 0
+
+    @pl.when(count_ref[0, 0] == 0)
+    def _scan():
+        blk = table_ref[...]
+        count_ref[0, 0] = jnp.sum((blk == lock_ref[0, 0]).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _poll_call(table2d: jax.Array, lock_id: jax.Array,
+               interpret: bool = False) -> jax.Array:
+    rows, lanes = table2d.shape
+    assert lanes == LANES and rows % BLOCK_ROWS == 0, table2d.shape
+    grid = (rows // BLOCK_ROWS,)
+    lock = jnp.reshape(lock_id.astype(table2d.dtype), (1, 1))
+    count = pl.pallas_call(
+        _poll_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(lock, table2d)
+    return count[0, 0]

@@ -18,6 +18,15 @@ themselves in the shared visible-readers table and never touch the central
 reader counter, which is exactly the paper's claim — and the engine's
 metrics report both throughput and the per-lock BRAVO statistics so the
 effect is observable.
+
+With ``device_leases=True`` (default) the epoch reads are additionally
+routed through the *device*-side batched lease API
+(``core.device_bravo.DeviceLeaseTable``): each decode step publishes the
+whole batch's request ids into an on-device lease table in one fused,
+donation-aliased program (zero host sync), and the weight updater / page
+compactor revoke those leases BRAVO-style before mutating.  The device
+table mirrors reader occupancy for the device-resident data plane the
+host locks can't see into.
 """
 
 from __future__ import annotations
@@ -33,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.atomics import LiveMem
+from ..core.device_bravo import DeviceLeaseTable, LeaseHandle
 from ..core.factory import LockEnv
 from ..models import model as M
 from ..models.common import ModelConfig
@@ -60,12 +70,14 @@ class EngineStats:
 
 
 class ModelStore:
-    """Epoch-versioned weights, guarded by a reader-writer lock."""
+    """Epoch-versioned weights, guarded by a reader-writer lock (and,
+    optionally, by a device-side lease table mirroring the readers)."""
 
-    def __init__(self, params, lock):
+    def __init__(self, params, lock, leases: Optional[LeaseHandle] = None):
         self.params = params
         self.epoch = 0
         self.lock = lock
+        self.leases = leases
 
     def read(self):
         tok = self.lock.acquire_read()
@@ -74,9 +86,37 @@ class ModelStore:
     def done_read(self, tok):
         self.lock.release_read(tok)
 
+    def read_batch(self, reader_ids):
+        """Epoch read for a whole request batch: the host read lock plus
+        ONE fused device-lease publish for all ``reader_ids`` (device int32
+        array) — no host-device synchronization on the fast path.  The
+        returned token carries the grant mask so ``done_read_batch`` only
+        clears the leases actually won (a denied reader must not wipe the
+        slot of whoever it collided with)."""
+        tok = self.lock.acquire_read()
+        granted = None
+        if self.leases is not None:
+            try:
+                self.leases.rearm()      # host-clock check; dispatch only
+                granted = self.leases.acquire(reader_ids)  # when inhibited
+            except BaseException:        # never leak the host read lock
+                self.lock.release_read(tok)
+                raise
+        return (tok, granted), self.params, self.epoch
+
+    def done_read_batch(self, tok, reader_ids):
+        host_tok, granted = tok
+        try:
+            if granted is not None:
+                self.leases.release(reader_ids, granted=granted)
+        finally:
+            self.lock.release_read(host_tok)
+
     def swap(self, new_params):
         tok = self.lock.acquire_write()
         try:
+            if self.leases is not None:
+                self.leases.revoke()     # drain device leases BRAVO-style
             self.params = new_params
             self.epoch += 1
         finally:
@@ -89,21 +129,38 @@ class PageTable:
     The device KV cache is a fixed pool; handlers *read* the mapping every
     step; the compactor *writes* it when reclaiming pages."""
 
-    def __init__(self, n_pages: int, lock):
+    def __init__(self, n_pages: int, lock,
+                 leases: Optional[LeaseHandle] = None):
         self.lock = lock
+        self.leases = leases
         self.owner = np.full((n_pages,), -1, np.int64)
         self.free: List[int] = list(range(n_pages))
 
     def lookup(self, rid: int) -> List[int]:
         tok = self.lock.acquire_read()
+        ids = granted = None
         try:
+            if self.leases is not None:
+                # control plane: rid arrives as a host int, so this read
+                # pays one tiny H2D upload (the decode fast path amortizes
+                # its reader-id upload per batch instead — see run())
+                self.leases.rearm()
+                ids = jnp.asarray([rid], jnp.int32)
+                granted = self.leases.acquire(ids)
             return list(np.where(self.owner == rid)[0])
         finally:
+            # only clear what acquire granted; if acquire itself raised
+            # (granted is None) an unmasked release could wipe a slot some
+            # OTHER reader legitimately holds
+            if granted is not None:
+                self.leases.release(ids, granted=granted)
             self.lock.release_read(tok)
 
     def allocate(self, rid: int, n: int) -> List[int]:
         tok = self.lock.acquire_write()
         try:
+            if self.leases is not None:
+                self.leases.revoke()
             if len(self.free) < n:
                 return []
             pages = [self.free.pop() for _ in range(n)]
@@ -115,6 +172,8 @@ class PageTable:
     def reclaim(self, rid: int) -> int:
         tok = self.lock.acquire_write()
         try:
+            if self.leases is not None:
+                self.leases.revoke()
             pages = list(np.where(self.owner == rid)[0])
             self.owner[pages] = -1
             self.free.extend(pages)
@@ -127,13 +186,25 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, mesh, rules,
                  lock_name: str = "bravo-ba", handlers: int = 4,
                  max_seq: int = 128, slots_per_handler: int = 4,
-                 n_pages: int = 4096, env: Optional[LockEnv] = None):
+                 n_pages: int = 4096, env: Optional[LockEnv] = None,
+                 device_leases: bool = True):
         self.cfg = cfg
         self.mesh = mesh
         self.rules = rules
         self.env = env or LockEnv(LiveMem())
-        self.store = ModelStore(params, self.env.make(lock_name))
-        self.pages = PageTable(n_pages, self.env.make(lock_name))
+        self.lease_tables: Dict[str, DeviceLeaseTable] = {}
+        model_h = pages_h = None
+        if device_leases:
+            # one table (hence one rbias) per guarded resource, matching
+            # BRAVO's per-lock bias rather than a process-global flag
+            self.lease_tables = {"model": DeviceLeaseTable(),
+                                 "pages": DeviceLeaseTable()}
+            model_h = self.lease_tables["model"].handle()
+            pages_h = self.lease_tables["pages"].handle()
+        self.store = ModelStore(params, self.env.make(lock_name),
+                                leases=model_h)
+        self.pages = PageTable(n_pages, self.env.make(lock_name),
+                               leases=pages_h)
         self.lock_name = lock_name
         self.handlers = handlers
         self.max_seq = max_seq
@@ -179,13 +250,16 @@ class ServingEngine:
         for i, r in enumerate(reqs):
             toks[i, S - len(r.prompt):] = r.prompt  # left-pad
             self.pages.allocate(r.rid, (len(r.prompt) + r.max_new + 63) // 64)
+        # the batch's reader ids, device-resident once per batch: every
+        # subsequent lease publish/clear is a single fused device program
+        rid_dev = jnp.asarray([r.rid for r in reqs], jnp.int32)
 
         # prefill under a read lock (one epoch for the whole batch)
-        tok, params, epoch = self.store.read()
+        tok, params, epoch = self.store.read_batch(rid_dev)
         try:
             last_logits, _ = self._prefill(params, {"tokens": jnp.asarray(toks)})
         finally:
-            self.store.done_read(tok)
+            self.store.done_read_batch(tok, rid_dev)
         with self._stats_lock:
             self.stats.prefills += 1
 
@@ -197,12 +271,12 @@ class ServingEngine:
         max_new = max(r.max_new for r in reqs)
         for step in range(S - 1 + max_new):
             clen = jnp.full((B,), step + 1, jnp.int32)
-            rtok, params_now, _ = self.store.read()
+            rtok, params_now, _ = self.store.read_batch(rid_dev)
             try:
                 nxt, logits, caches = self._decode(params_now, caches,
                                                    cur, clen)
             finally:
-                self.store.done_read(rtok)
+                self.store.done_read_batch(rtok, rid_dev)
             with self._stats_lock:
                 self.stats.decode_steps += 1
                 self.stats.read_acquires += 1
@@ -277,4 +351,7 @@ class ServingEngine:
             st = getattr(lk, "stats", None)
             if st is not None:
                 out[name] = dataclasses.asdict(st)
+        if self.lease_tables:
+            out["device_leases"] = {k: t.stats()
+                                    for k, t in self.lease_tables.items()}
         return out

@@ -110,3 +110,42 @@ def test_distributed_revoke_collective():
     with mesh:
         count = fn(table, jnp.int32(9))
     assert int(count) == 2
+
+
+def test_distributed_revoke_multipod_mesh():
+    """The 2D ("pod", "data") mesh path: hierarchical psum, same count."""
+    import jax
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("pod", "data"))
+    fn = DB.make_distributed_revoke(mesh, axis=("pod", "data"))
+    table = jnp.zeros((4, 128), jnp.int32).at[0, 1].set(5).at[3, 99].set(5)
+    with mesh:
+        count = fn(table, jnp.int32(5))
+    assert int(count) == 2
+
+
+def test_denied_reader_release_keeps_winner_lease():
+    """A reader whose publish was DENIED (slot collision) must not clear
+    the winning reader's slot on release — the grant mask gates the clear."""
+    from repro.kernels import ops as K
+
+    tbl = DB.DeviceLeaseTable()
+    h = tbl.handle()
+    rids = jnp.asarray([3, 4, 5], jnp.int32)
+    g1 = h.acquire(rids)
+    assert np.asarray(g1).all()
+    g2 = h.acquire(rids)              # same ids -> all denied
+    assert not np.asarray(g2).any()
+    h.release(rids, granted=g2)       # denied batch releases: no effect
+    assert int(K.revocation_poll(tbl.state.table, h.lock_id)) > 0
+    h.release(rids, granted=g1)       # winners release: table drains
+    assert int(K.revocation_poll(tbl.state.table, h.lock_id)) == 0
+    # functional API: same contract via the granted= kwarg
+    st = DB.init_state()
+    readers = np.arange(10, 14)
+    st, fg1 = DB.acquire(st, 9, readers)
+    st, fg2 = DB.acquire(st, 9, readers)
+    st = DB.release(st, 9, readers, granted=fg2)
+    assert int(K.revocation_poll(st.table, 9)) > 0
+    st = DB.release(st, 9, readers, granted=fg1)
+    assert int(K.revocation_poll(st.table, 9)) == 0

@@ -61,3 +61,124 @@ def test_scan_after_publish_counts():
     t2, granted = K.publish(table, slots, ids)
     _, count = K.revocation_scan(t2, 42)
     assert int(count) == int(jnp.sum(granted)) == slots.shape[0]
+
+
+def test_publish_collision_cas_ordering():
+    """Duplicate in-batch requests for one slot: only the FIRST wins.
+
+    Pins the sequential-CAS ordering semantics of both the legacy loop
+    kernel and the vectorized fused kernel against ``kernels/ref.py`` —
+    ``device_bravo.acquire`` relies on this to deny all-but-one of a batch
+    of readers hashing to the same slot."""
+    table = jnp.zeros((8, 128), jnp.int32).at[0, 5].set(77)  # slot 5 taken
+    #          free slot, repeated x3 | occupied slot, repeated x2 | free
+    slots = jnp.asarray(np.array([9, 9, 9, 5, 5, 200], np.int32))
+    ids = jnp.asarray(np.array([11, 22, 33, 44, 55, 66], np.int32))
+    want_granted = np.array([True, False, False, False, False, True])
+
+    for impl in ("loop", "fused"):
+        if impl == "loop":
+            t2, g = _publish_call(table, slots, ids, interpret=True)
+        else:
+            t2, g = K.fused_publish(jnp.asarray(table),
+                                    jnp.ones((), jnp.int32), slots, ids)
+        flat = np.asarray(t2).reshape(-1)
+        np.testing.assert_array_equal(np.asarray(g), want_granted, impl)
+        assert flat[9] == 11, impl      # first requester won, not 22/33
+        assert flat[5] == 77, impl      # occupied slot untouched
+        assert flat[200] == 66, impl
+        tr, gr = R.publish_ref(jnp.asarray(table), slots, ids)
+        np.testing.assert_array_equal(flat, np.asarray(tr).reshape(-1))
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(gr))
+
+
+@pytest.mark.parametrize("rows,m", [(8, 1), (8, 16), (32, 100), (64, 256)])
+def test_fused_publish_matches_ref(rows, m):
+    rng = np.random.default_rng(m * rows + 1)
+    table = np.zeros((rows, 128), np.int32)
+    occupied = rng.choice(rows * 128, size=rows, replace=False)
+    table.reshape(-1)[occupied] = 99
+    slots = rng.integers(0, rows * 128, size=m).astype(np.int32)
+    ids = rng.integers(1, 1 << 20, size=m).astype(np.int32)
+    tk, gk = K.fused_publish(jnp.asarray(table), jnp.ones((), jnp.int32),
+                             jnp.asarray(slots), jnp.asarray(ids))
+    tr, gr = R.publish_ref(jnp.asarray(table), jnp.asarray(slots),
+                           jnp.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(tk), np.asarray(tr))
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(gr))
+    # rbias clear in kernel -> publish fully undone, nothing granted
+    tz, gz = K.fused_publish(jnp.asarray(table), jnp.zeros((), jnp.int32),
+                             jnp.asarray(slots), jnp.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(tz), table)
+    assert not np.asarray(gz).any()
+    # fused clear matches ref
+    tc = K.fused_clear(tk, jnp.asarray(slots))
+    np.testing.assert_array_equal(np.asarray(tc),
+                                  np.asarray(R.clear_ref(tr,
+                                                         jnp.asarray(slots))))
+
+
+def test_fused_publish_aliases_table_buffer():
+    """The fused path must request in-place table update (no 16KB copy):
+    the Pallas call carries input_output_aliases for the table operand."""
+    import jax
+
+    table = jnp.zeros((8, 128), jnp.int32)
+    slots = jnp.asarray(np.array([1, 2], np.int32))
+    ids = jnp.asarray(np.array([5, 6], np.int32))
+    jaxpr = str(jax.make_jaxpr(
+        lambda t, r, s, i: K.fused_publish(t, r, s, i))(
+            table, jnp.ones((), jnp.int32), slots, ids))
+    assert "input_output_aliases" in jaxpr
+    assert "(0, 0)" in jaxpr.split("input_output_aliases", 1)[1][:40]
+
+
+def test_revocation_poll_early_exit_semantics():
+    rng = np.random.default_rng(3)
+    table = np.zeros((32, 128), np.int32)
+    hits = rng.choice(4096, 17, replace=False)
+    table.reshape(-1)[hits] = 9
+    cnt = K.revocation_poll(jnp.asarray(table), 9)
+    assert 1 <= int(cnt) <= 17          # lower bound when held...
+    empty = K.revocation_poll(jnp.zeros((32, 128), jnp.int32), 9)
+    assert int(empty) == 0              # ...exact when drained
+    # a match in the FIRST block stops the scan there
+    first_blk = np.zeros((32, 128), np.int32)
+    first_blk[0, 0] = 9
+    first_blk[31, 127] = 9              # never reached
+    c = K.revocation_poll(jnp.asarray(first_blk), 9)
+    assert int(c) == 1
+
+
+def test_hash_vec_matches_host():
+    """Device limb-pair splitmix64 == host scalar mix_hash, bit-exact."""
+    from repro.core.table import mix_hash
+    from repro.kernels.hash import (hash_slots, mix_hash_u64, split64)
+
+    rng = np.random.default_rng(7)
+    tids = rng.integers(0, 2**63, size=64, dtype=np.uint64)
+    for lock in (1, 42, 2**40 + 17):
+        want = np.array([mix_hash(lock, int(t)) for t in tids], np.uint64)
+        np.testing.assert_array_equal(mix_hash_u64(lock, tids), want)
+        lh, ll = split64(lock)
+        s = hash_slots(jnp.asarray(lh, jnp.uint32),
+                       jnp.asarray(ll, jnp.uint32),
+                       jnp.asarray((tids >> np.uint64(32)).astype(np.uint32)),
+                       jnp.asarray(tids.astype(np.uint32)), 4096)
+        np.testing.assert_array_equal(
+            np.asarray(s), (want & np.uint64(4095)).astype(np.int32))
+
+
+def test_device_acquire_slots_match_host_hashing():
+    """End-to-end: the fused on-device hash publishes into exactly the
+    slots the host-side slots_for computes."""
+    from repro.core import device_bravo as DB
+
+    st = DB.init_state()
+    readers = np.arange(100, 116)
+    st, granted = DB.acquire(st, lock_id=13, reader_ids=readers)
+    assert np.asarray(granted).all()
+    flat = np.asarray(st.table).reshape(-1)
+    host_slots = DB.slots_for(13, readers)
+    assert (flat[host_slots] == 13).all()
+    assert (flat != 0).sum() == len(np.unique(host_slots))

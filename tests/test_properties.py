@@ -124,3 +124,85 @@ def test_kernel_publish_matches_sequential_cas(seed, n):
                             jnp.asarray(ids))
     assert np.array_equal(np.asarray(t2r).reshape(-1), flat)
     assert np.array_equal(np.asarray(gr), np.array(granted))
+
+
+# ---------------------------------------------------------------------------
+# Fused/aliased kernels (the device-BRAVO zero-sync fast path) vs ref.py
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def table_and_requests(draw):
+    rows = draw(st.sampled_from([8, 16, 32]))
+    n = draw(st.integers(1, 96))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    table = np.zeros((rows, 128), np.int32)
+    n_occ = draw(st.integers(0, 32))
+    if n_occ:
+        occ = rng.choice(rows * 128, size=n_occ, replace=False)
+        table.reshape(-1)[occ] = rng.integers(1, 100, n_occ)
+    # bias toward collisions: draw slots from a small range half the time
+    hi = rows * 128 if draw(st.booleans()) else min(rows * 128, n * 2)
+    slots = rng.integers(0, hi, size=n).astype(np.int32)
+    ids = rng.integers(1, 2**31 - 1, size=n).astype(np.int32)
+    return table, slots, ids
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=table_and_requests(), rbias=st.booleans())
+def test_fused_publish_matches_ref_random(data, rbias):
+    """Fused (aliased, vectorized) publish == sequential-CAS oracle, for
+    random tables, colliding slot vectors and ids, under both rbias
+    states."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as K
+    from repro.kernels import ref as R
+    table, slots, ids = data
+    rb = jnp.asarray(1 if rbias else 0, jnp.int32)
+    tk, gk = K.fused_publish(jnp.asarray(table), rb, jnp.asarray(slots),
+                             jnp.asarray(ids))
+    if rbias:
+        tr, gr = R.publish_ref(jnp.asarray(table), jnp.asarray(slots),
+                               jnp.asarray(ids))
+        assert np.array_equal(np.asarray(tk), np.asarray(tr))
+        assert np.array_equal(np.asarray(gk), np.asarray(gr))
+    else:
+        # rbias cleared mid-protocol -> the in-kernel undo must leave the
+        # table untouched and grant nothing
+        assert np.array_equal(np.asarray(tk), table)
+        assert not np.asarray(gk).any()
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=table_and_requests())
+def test_fused_clear_matches_ref_random(data):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as K
+    from repro.kernels import ref as R
+    table, slots, _ = data
+    tc = K.fused_clear(jnp.asarray(table), jnp.asarray(slots))
+    assert np.array_equal(np.asarray(tc),
+                          np.asarray(R.clear_ref(jnp.asarray(table),
+                                                 jnp.asarray(slots))))
+    assert (np.asarray(tc).reshape(-1)[slots] == 0).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=table_and_requests(), lock=st.integers(0, 120))
+def test_scan_and_poll_match_ref_random(data, lock):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as K
+    from repro.kernels import ref as R
+    table, _, _ = data
+    mask, count = K.revocation_scan(jnp.asarray(table), lock)
+    mref, cref = R.scan_ref(jnp.asarray(table), lock)
+    assert np.array_equal(np.asarray(mask), np.asarray(mref))
+    assert int(count) == int(cref)
+    # the early-exit poll agrees on emptiness and never overcounts
+    poll = int(K.revocation_poll(jnp.asarray(table), lock))
+    assert (poll == 0) == (int(cref) == 0)
+    assert poll <= int(cref)
