@@ -25,7 +25,6 @@ import argparse
 import json
 import os
 import sys
-import time
 from pathlib import Path
 
 
@@ -53,27 +52,10 @@ import jax.numpy as jnp                                          # noqa: E402
 import numpy as np                                               # noqa: E402
 from jax.sharding import Mesh                                    # noqa: E402
 
+from benchmarks.smoke import FAILURES, check, timeit             # noqa: E402
 from repro.core import device_bravo as DB                        # noqa: E402
 from repro.kernels import ops as K                               # noqa: E402
 from repro.kernels import ref as R                               # noqa: E402
-
-FAILURES = []
-
-
-def check(ok: bool, what: str) -> None:
-    status = "ok" if ok else "MISMATCH"
-    print(f"[{status}] {what}", flush=True)
-    if not ok:
-        FAILURES.append(what)
-
-
-def timeit(fn, iters: int) -> float:
-    """Mean wall-clock seconds per call (fn must block on completion)."""
-    fn()                                 # warmup / compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        fn()
-    return (time.perf_counter() - t0) / iters
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,319 @@
+"""Registry microbenchmark: the shared-bias flap, before and after.
+
+The headline experiment is the ISSUE's acceptance scenario: 32 locks
+multiplexed over one visible-readers table, a read-heavy workload on all of
+them, and ONE noisy writer repeatedly revoking lock 0.  Under the scalar
+``rbias`` (``DeviceLeaseTable``, the pre-registry design) every revocation
+clears the bias of ALL 32 locks and the shared inhibit window pins it off —
+the other 31 locks' acquires go ~100% slow-path.  Under the registry's
+per-lock bias vectors only lock 0 flaps; the other 31 locks' slow-path
+fraction stays at the hash-collision floor (< 5%).
+
+Also records: kernel-vs-ref verification for the multi-lock kernels (the
+CI smoke gate), the in-place-table proof for the registry's fused acquire
+(``input_output_aliases`` + jit donation — unchanged from the scalar
+path), the zero-transfer proof (steady-state acquire/release pair under
+``jax.transfer_guard("disallow")``), the one-dispatch-vs-32 multi-lock
+batch speedup, and device KV-pool latencies.
+
+    PYTHONPATH=src python -m benchmarks.registry            # full
+    PYTHONPATH=src python -m benchmarks.registry --smoke    # CI: fast,
+        # exits nonzero on any mismatch or lost guarantee
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.smoke import FAILURES, check, timeit
+from repro.core import device_bravo as DB
+from repro.core import registry as REG
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+from repro.serving.kv_pool import KVPool
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: fewer rounds/iters, no JSON unless "
+                         "--out is given")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="bias-flap rounds (default: 6 smoke / 24 full)")
+    ap.add_argument("--locks", type=int, default=32)
+    ap.add_argument("--readers", type=int, default=4,
+                    help="readers per lock per round")
+    ap.add_argument("--out", default=None)
+    return ap.parse_args()
+
+
+# ---------------------------------------------------------------------------
+# Sections
+# ---------------------------------------------------------------------------
+
+
+def bench_correctness() -> dict:
+    """Multi-lock kernels vs kernels/ref.py (the CI smoke gate)."""
+    rng = np.random.default_rng(0)
+    table = np.zeros((32, 128), np.int32)
+    occ = rng.choice(4096, 64, replace=False)
+    table.reshape(-1)[occ] = 424242
+    rbias = np.ones(REG.MAX_LOCKS, np.int32)
+    rbias[rng.choice(REG.MAX_LOCKS, 40, replace=False)] = 0
+    m = 128
+    slots = rng.integers(0, 4096, m).astype(np.int32)
+    slots[1] = slots[0]                       # in-batch collisions
+    lidx = rng.integers(0, REG.MAX_LOCKS, m).astype(np.int32)
+    ids = rng.integers(1, 1 << 20, m).astype(np.int32)
+    t, rb = jnp.asarray(table), jnp.asarray(rbias)
+    s, li, i = jnp.asarray(slots), jnp.asarray(lidx), jnp.asarray(ids)
+
+    tk, gk = K.fused_publish_multi(t, rb, s, li, i)
+    tr, gr = R.publish_multi_ref(t, rb, s, li, i)
+    check(np.array_equal(np.asarray(tk), np.asarray(tr))
+          and np.array_equal(np.asarray(gk), np.asarray(gr)),
+          "fused_publish_multi == publish_multi_ref")
+    # all-lanes-clear == nothing lands (the scalar kernel's rbias=0 case)
+    tz, gz = K.fused_publish_multi(t, jnp.zeros_like(rb), s, li, i)
+    check(np.array_equal(np.asarray(tz), table) and not np.asarray(gz).any(),
+          "fused_publish_multi all-unbiased -> full undo")
+    # per-lane undo: only the unbiased lanes' requests are undone
+    biased_req = rbias[lidx] != 0
+    check(bool((~np.asarray(gk)[~biased_req]).all()),
+          "unbiased lanes' requests all denied")
+
+    vals = jnp.asarray(rng.choice(1 << 20, 16), jnp.int32)
+    ck = K.revocation_poll_multi(tk, vals)
+    cr = R.multi_count_ref(tk, vals)
+    check(np.array_equal(np.asarray(ck), np.asarray(cr)),
+          "revocation_poll_multi == multi_count_ref")
+    return {"verified": not FAILURES}
+
+
+def bench_aliasing() -> dict:
+    """The registry acquire must keep the scalar path's guarantees: pallas
+    input_output_aliases {0: 0} (in-place 16KB table update) and jit-level
+    donation of the table buffer."""
+    table = jnp.zeros((32, 128), jnp.int32)
+    rbias = jnp.ones((REG.MAX_LOCKS,), jnp.int32)
+    rids = jnp.arange(8, dtype=jnp.int32)
+    lh = jnp.asarray(0, jnp.uint32)
+    ll = jnp.asarray(7, jnp.uint32)
+    idx = jnp.asarray(3, jnp.int32)
+    val = jnp.asarray(7, jnp.int32)
+    args = (table, rbias, rids, lh, ll, idx, val)
+    jaxpr = str(jax.make_jaxpr(REG._acquire_impl)(*args))
+    pallas_alias = "input_output_aliases" in jaxpr and \
+        "(0, 0)" in jaxpr.split("input_output_aliases", 1)[1][:40]
+    lowered = jax.jit(REG._acquire_impl, donate_argnums=(0,)).lower(
+        *args).as_text()
+    donated = "tf.aliasing_output" in lowered or \
+        "jax.buffer_donor" in lowered
+    check(pallas_alias, "registry acquire: pallas input_output_aliases {0:0}")
+    check(donated, "registry acquire: jit-level table buffer donation")
+    return {"pallas_input_output_aliases": pallas_alias,
+            "jit_buffer_donation": donated,
+            "donation_active_backend": jax.default_backend() != "cpu"}
+
+
+def bench_transfers(batch: int = 16) -> dict:
+    """Steady-state registry acquire/release pair: zero host transfers
+    (same guarantee the scalar DeviceLeaseTable bench proves)."""
+    reg = REG.BravoRegistry()
+    h = reg.alloc("xfer")
+    rids = jnp.arange(batch, dtype=jnp.int32)     # device-resident, once
+    g = h.acquire(rids)
+    h.release(rids, granted=g)                    # warmup / compile
+    guard_ok = True
+    try:
+        with jax.transfer_guard("disallow"):
+            g = h.acquire(rids)
+            h.release(rids, granted=g)
+    except Exception as e:                        # pragma: no cover
+        guard_ok = False
+        print(f"  transfer_guard tripped: {e}", flush=True)
+    check(guard_ok, "registry pair runs under jax.transfer_guard('disallow')")
+    return {"fused_transfers_per_pair_steady": 0 if guard_ok else -1,
+            "fused_guard_disallow_ok": guard_ok}
+
+
+def _flap_workload(make_handles, revoke_noisy, rounds: int, locks: int,
+                   readers: int) -> dict:
+    """One round = noisy writer revokes lock 0, then every lock rearms,
+    acquires its reader batch, and (once all are live) releases.  Returns
+    per-lock grant tallies."""
+    hs = make_handles()
+    batches = [jnp.arange(k * 1000, k * 1000 + readers, dtype=jnp.int32)
+               for k in range(locks)]
+    granted = np.zeros(locks, np.int64)
+    requests = np.zeros(locks, np.int64)
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        revoke_noisy(hs)
+        masks = []
+        for k in range(locks):
+            hs[k].rearm()
+            g = np.asarray(hs[k].acquire(batches[k]))
+            granted[k] += g.sum()
+            requests[k] += g.size
+            masks.append(g)
+        for k in range(locks):
+            hs[k].release(batches[k], granted=jnp.asarray(masks[k]))
+    dt = time.perf_counter() - t0
+    slow = 1.0 - granted / requests
+    return {"slow_frac_noisy_lock": round(float(slow[0]), 4),
+            "slow_frac_others": round(float(slow[1:].mean()), 4),
+            "slow_frac_others_max": round(float(slow[1:].max()), 4),
+            "rounds": rounds, "locks": locks, "readers_per_lock": readers,
+            "wall_s": round(dt, 3)}
+
+
+def bench_bias_flap(rounds: int, locks: int, readers: int) -> dict:
+    """THE acceptance experiment: scalar shared rbias vs per-lock vectors.
+
+    The noisy writer revokes with a huge inhibit multiplier so the bias
+    window spans the whole run — the worst-case flap.  Scalar: that window
+    (and the global drain gate) holds EVERY lock's fast path down.
+    Registry: only lock 0 pays; the other 31 locks ride the fast path at
+    the hash-collision floor."""
+    n_huge = 10**6
+
+    def scalar_handles():
+        tbl = DB.DeviceLeaseTable()
+        return [tbl.handle() for _ in range(locks)]
+
+    def registry_handles():
+        reg = REG.BravoRegistry()
+        return [reg.alloc(f"L{k}") for k in range(locks)]
+
+    def noisy(hs):
+        hs[0].revoke(n=n_huge)
+
+    scalar = _flap_workload(scalar_handles, noisy, rounds, locks, readers)
+    registry = _flap_workload(registry_handles, noisy, rounds, locks,
+                              readers)
+    check(registry["slow_frac_others"] < 0.05,
+          f"registry: other locks slow-path "
+          f"{registry['slow_frac_others']:.2%} < 5%")
+    check(scalar["slow_frac_others"] > 0.5,
+          f"scalar rbias: other locks slow-path "
+          f"{scalar['slow_frac_others']:.2%} (the flap)")
+    check(registry["slow_frac_noisy_lock"] > 0.5,
+          "registry: the noisy lock itself IS inhibited")
+    return {"scalar_rbias": scalar, "registry": registry}
+
+
+def bench_multi_dispatch(locks: int, readers: int, iters: int) -> dict:
+    """A mixed batch spanning all locks: one fused by-index dispatch vs one
+    dispatch per lock."""
+    reg = REG.BravoRegistry()
+    hs = [reg.alloc(f"M{k}") for k in range(locks)]
+    lidx = jnp.asarray(np.repeat([h.idx for h in hs], readers), jnp.int32)
+    rids = jnp.arange(locks * readers, dtype=jnp.int32)
+    batches = [jnp.arange(k * readers, (k + 1) * readers, dtype=jnp.int32)
+               for k in range(locks)]
+
+    def one_dispatch():
+        g = reg.acquire_by_index(lidx, rids)
+        reg.release_by_index(lidx, rids, g)
+        jax.block_until_ready(reg.table)
+
+    def per_lock():
+        gs = [hs[k].acquire(batches[k]) for k in range(locks)]
+        for k in range(locks):
+            hs[k].release(batches[k], granted=gs[k])
+        jax.block_until_ready(reg.table)
+
+    fused_s = timeit(one_dispatch, iters)
+    loop_s = timeit(per_lock, max(1, iters // 4))
+    check(int(np.asarray(K.revocation_poll_multi(
+        reg.table, jnp.asarray([h.lock_id for h in hs], jnp.int32))).sum())
+        == 0, "multi-dispatch workload drains clean")
+    return {"locks": locks, "readers_per_lock": readers,
+            "one_dispatch_us": round(fused_s * 1e6, 2),
+            "per_lock_dispatch_us": round(loop_s * 1e6, 2),
+            "dispatch_speedup": round(loop_s / fused_s, 3)}
+
+
+def bench_kv_pool(iters: int) -> dict:
+    """Device-resident paged-KV pool hot paths (+ zero-sync batch read)."""
+    pool = KVPool(4096, stripes=4)
+    rids = jnp.asarray([3, 7, 11, 15], jnp.int32)
+    pool.allocate(3, 8)
+    pool.allocate(7, 8)
+    mask = np.asarray(pool.lookup_batch(rids))     # warmup / compile
+    check(mask[0].sum() == 8 and mask[2].sum() == 0,
+          "kv pool batch mask matches allocations")
+    guard_ok = True
+    try:
+        with jax.transfer_guard("disallow"):
+            pool.lookup_batch(rids)
+    except Exception as e:                         # pragma: no cover
+        guard_ok = False
+        print(f"  kv transfer_guard tripped: {e}", flush=True)
+    check(guard_ok, "kv lookup_batch runs under transfer_guard('disallow')")
+    lookup_s = timeit(lambda: jax.block_until_ready(pool.lookup_batch(rids)),
+                      iters)
+
+    box = {"rid": 100}
+
+    def alloc_reclaim():
+        rid = box["rid"]
+        box["rid"] += 1
+        pool.allocate(rid, 8)
+        pool.reclaim(rid)
+
+    pair_s = timeit(alloc_reclaim, max(2, iters // 4))
+    check(pool.free_count() == 4096 - 16, "kv pool conserves pages")
+    check((pool.registry.held_multi(pool.locks) == 0).all(),
+          "kv pool leases drain clean")
+    return {"n_pages": 4096, "stripes": 4,
+            "lookup_batch_us": round(lookup_s * 1e6, 2),
+            "alloc_reclaim_pair_us": round(pair_s * 1e6, 2)}
+
+
+def main() -> int:
+    args = _parse()
+    smoke = args.smoke
+    rounds = args.rounds or (6 if smoke else 24)
+    iters = 4 if smoke else 50
+    rec = {
+        "bench": "registry",
+        "mode": "smoke" if smoke else "full",
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "max_locks": REG.MAX_LOCKS,
+        "correctness": bench_correctness(),
+        "aliasing": bench_aliasing(),
+        "transfers": bench_transfers(),
+        "bias_flap": bench_bias_flap(rounds, args.locks, args.readers),
+        "multi_dispatch": bench_multi_dispatch(args.locks, args.readers,
+                                               iters),
+        "kv_pool": bench_kv_pool(iters),
+        "failures": FAILURES,
+    }
+    out = args.out
+    if out is None and not smoke:
+        out = str(Path(__file__).resolve().parents[1]
+                  / "BENCH_registry.json")
+    if out:
+        Path(out).write_text(json.dumps(rec, indent=1))
+        print(f"wrote {out}", flush=True)
+    print(json.dumps(rec["bias_flap"], indent=1))
+    if FAILURES:
+        print(f"FAILED: {FAILURES}", file=sys.stderr)
+        return 1
+    print("registry bench OK", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

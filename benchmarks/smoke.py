@@ -1,0 +1,30 @@
+"""Shared pass/fail plumbing for the kernel-vs-ref smoke gates.
+
+Both ``benchmarks.device_bravo`` and ``benchmarks.registry`` are wired
+into ``scripts/ci.sh`` as gates that exit nonzero on any mismatch; the
+check/timeit helpers live here once so the gate semantics cannot drift
+between them.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+FAILURES: List[str] = []
+
+
+def check(ok: bool, what: str) -> None:
+    status = "ok" if ok else "MISMATCH"
+    print(f"[{status}] {what}", flush=True)
+    if not ok:
+        FAILURES.append(what)
+
+
+def timeit(fn: Callable[[], object], iters: int) -> float:
+    """Mean wall-clock seconds per call (fn must block on completion)."""
+    fn()                                 # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters

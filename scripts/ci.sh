@@ -20,3 +20,9 @@ python scripts/smoke_locks.py
 # lease kernels against kernels/ref.py (exits nonzero on any mismatch) and
 # the 1D/2D distributed-revoke collectives on tiny meshes
 python -m benchmarks.device_bravo --smoke
+
+# multi-lock registry smoke: multi-lock kernels vs ref, the per-lock
+# bias-flap acceptance (31 bystander locks < 5% slow-path under a noisy
+# writer, vs ~100% with the scalar rbias), zero-transfer + aliasing
+# guarantees, and the device KV pool
+python -m benchmarks.registry --smoke

@@ -4,8 +4,9 @@
 # paper's scalability figures, and the TPU-native device-side analogue.
 
 from .atomics import Cell, LiveMem, Mem, MemStats
-from .bravo import BRAVO, DEFAULT_N, BravoStats
+from .bravo import BRAVO, DEFAULT_N, BravoStats, adaptive_inhibit
 from .factory import ALL_LOCK_NAMES, PAPER_LOCK_NAMES, LockEnv
+from .registry import MAX_LOCKS, BravoRegistry, RegistryHandle
 from .rwlocks import (CentralCounterRWLock, CohortRWLock, PerCPULock, PFQLock,
                       PFTLock, RWLock)
 from .sim import CoherenceParams, SimDeadlock, SimMem, Topology
@@ -13,8 +14,9 @@ from .table import DEFAULT_TABLE_SIZE, VisibleReadersTable, mix_hash
 
 __all__ = [
     "Cell", "LiveMem", "Mem", "MemStats",
-    "BRAVO", "DEFAULT_N", "BravoStats",
+    "BRAVO", "DEFAULT_N", "BravoStats", "adaptive_inhibit",
     "ALL_LOCK_NAMES", "PAPER_LOCK_NAMES", "LockEnv",
+    "MAX_LOCKS", "BravoRegistry", "RegistryHandle",
     "CentralCounterRWLock", "CohortRWLock", "PerCPULock", "PFQLock",
     "PFTLock", "RWLock",
     "CoherenceParams", "SimDeadlock", "SimMem", "Topology",

@@ -18,21 +18,41 @@ Reader slow path: acquire read on the underlying lock; while holding it
 Writer path: acquire write on the underlying lock; if ``RBias``: clear it,
 then scan the whole table and wait for every slot publishing this lock to
 drain (revocation).  The revocation duration ``d`` inhibits re-arming for
-``N*d`` (default N=9), bounding worst-case writer slowdown to ~1/(N+1) ≈ 10%
-(*primum non nocere*, paper §3).
+``max(d, ewma(d)) * N`` (default N=9, see :func:`adaptive_inhibit`),
+bounding worst-case writer slowdown to ~1/(N+1) ≈ 10% (*primum non
+nocere*, paper §3) while smoothing over one-off scan outliers.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Tuple
 
 from .atomics import Mem
 from .rwlocks import RWLock
 from .table import VisibleReadersTable, next_lock_id
 
-__all__ = ["BRAVO", "BravoStats", "DEFAULT_N"]
+__all__ = ["BRAVO", "BravoStats", "DEFAULT_N", "adaptive_inhibit"]
 
 DEFAULT_N = 9  # slow-down guard (paper Listing 1 line 8)
+
+
+def adaptive_inhibit(prev_ewma: int, d: int, n: int) -> Tuple[int, int]:
+    """Per-lock adaptive inhibit window: -> (new_ewma, window).
+
+    The paper sets InhibitUntil from the *last* revocation alone
+    (``now + d*N``); a single unlucky scan then mis-sizes the window for
+    every future rearm of that lock.  Instead each lock tracks a smoothed
+    revocation cost (EWMA, alpha=1/4) and the window is
+    ``max(d, ewma) * N`` — measured revocation latency times the
+    slow-down multiplier, never shorter than the paper's bound for the
+    revocation just paid.  This ONE policy is shared by the host
+    :class:`BRAVO`, the device :class:`~.device_bravo.DeviceLeaseTable`
+    and the per-lock vectors of :class:`~.registry.BravoRegistry`, so host
+    and device rearm decisions match.
+    """
+    ewma = d if prev_ewma == 0 else (3 * prev_ewma + d) // 4
+    return ewma, max(d, ewma) * n
 
 
 @dataclass
@@ -69,6 +89,9 @@ class BRAVO(RWLock):
                               entries_per_line=8)
         self.rbias = hdr.cell(0)
         self.inhibit_until = hdr.cell(1)
+        # smoothed per-lock revocation cost (policy state, not lock state:
+        # only the writer — who holds write exclusion — ever touches it)
+        self.revoke_ewma_ns = 0
         self.stats = BravoStats() if collect_stats else None
 
     # ------------------------------------------------------------- readers
@@ -123,8 +146,11 @@ class BRAVO(RWLock):
                 # wait for each conflicting fast-path reader to depart
                 mem.wait_while(self.table.cell(i), lambda v, L=lid: v == L)
             now = mem.now()
-            # primum non nocere: bound revocation-induced slow-down
-            self.inhibit_until.store(now + (now - start) * self.n)
+            # primum non nocere: bound revocation-induced slow-down with
+            # the per-lock adaptive window (same policy as the device side)
+            self.revoke_ewma_ns, window = adaptive_inhibit(
+                self.revoke_ewma_ns, now - start, self.n)
+            self.inhibit_until.store(now + window)
             if self.stats:
                 self.stats.revocations += 1
                 self.stats.revocation_ns += now - start

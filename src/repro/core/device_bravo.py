@@ -69,7 +69,7 @@ import numpy as np
 from ..dist.sharding import hierarchical_psum, shard_map_compat
 from ..kernels import hash as H
 from ..kernels import ops as K
-from .bravo import DEFAULT_N
+from .bravo import DEFAULT_N, adaptive_inhibit
 from .table import mix_hash_vec, next_lock_id
 from .table import mix_hash  # noqa: F401  (re-export: scalar host oracle)
 
@@ -85,6 +85,7 @@ class DeviceLeaseState:
     table: jax.Array          # (rows, 128) int32
     rbias: jax.Array          # () int32
     inhibit_until_ns: int     # host clock (ns)
+    revoke_ewma_ns: int = 0   # smoothed revocation cost (adaptive_inhibit)
 
 
 def init_state(slots: int = TABLE_SLOTS) -> DeviceLeaseState:
@@ -171,22 +172,16 @@ class _Programs(NamedTuple):
 
 @functools.lru_cache(maxsize=None)
 def _programs() -> _Programs:
-    """jit the fused programs once, donating the table/grants buffers only
-    on backends that implement donation (CPU — the validation backend —
-    would ignore it and warn on every compile)."""
-    donating = jax.default_backend() != "cpu"
-
-    def jit(fn, n_donated):
-        return jax.jit(fn, donate_argnums=tuple(range(n_donated))
-                       if donating else ())
-
+    """jit the fused programs once, donating the table/grants buffers via
+    the shared :func:`~repro.kernels.ops.jit_donating` policy (CPU — the
+    validation backend — ignores donation and would warn per compile)."""
     return _Programs(
-        acquire_limbs=jit(_acquire_impl, 2),
-        acquire_ids32=jit(_acquire_ids32_impl, 2),
-        release_limbs=jit(_release_impl, 1),
-        release_ids32=jit(_release_ids32_impl, 1),
-        release_all_limbs=jit(_release_all_impl, 1),
-        release_all_ids32=jit(_release_ids32_all_impl, 1))
+        acquire_limbs=K.jit_donating(_acquire_impl, 2),
+        acquire_ids32=K.jit_donating(_acquire_ids32_impl, 2),
+        release_limbs=K.jit_donating(_release_impl, 1),
+        release_ids32=K.jit_donating(_release_ids32_impl, 1),
+        release_all_limbs=K.jit_donating(_release_all_impl, 1),
+        release_all_ids32=K.jit_donating(_release_ids32_all_impl, 1))
 
 
 # ---------------------------------------------------------------------------
@@ -284,8 +279,9 @@ def revoke(state: DeviceLeaseState, lock_id: int, *,
                    wait_poll_s=wait_poll_s, max_wait_s=max_wait_s,
                    pipeline_depth=pipeline_depth)
     now = time.monotonic_ns()
+    ewma, window = adaptive_inhibit(state.revoke_ewma_ns, now - start, n)
     return dataclasses.replace(
-        state, inhibit_until_ns=now + (now - start) * n), scans
+        state, inhibit_until_ns=now + window, revoke_ewma_ns=ewma), scans
 
 
 def rearm(state: DeviceLeaseState) -> DeviceLeaseState:
@@ -371,14 +367,22 @@ class DeviceLeaseTable:
                            pipeline_depth=pipeline_depth)
             now = time.monotonic_ns()
             with self._mu:
+                ewma, window = adaptive_inhibit(
+                    self.state.revoke_ewma_ns, now - start, n)
                 self.state = dataclasses.replace(
-                    self.state, inhibit_until_ns=now + (now - start) * n)
+                    self.state, inhibit_until_ns=now + window,
+                    revoke_ewma_ns=ewma)
         finally:
             with self._mu:
                 self._revoking -= 1
         return scans
 
     def rearm(self) -> bool:
+        # NB: rbias is one scalar shared by every handle on this table, so
+        # the gate below is necessarily GLOBAL — any in-flight drain blocks
+        # every handle's rearm (the shared-bias flap).  The per-lock fix
+        # lives in ``registry.BravoRegistry``, whose rbias is a vector and
+        # whose rearm gates on that lock's drain alone.
         with self._mu:
             if self._armed:
                 return True               # no dispatch on the hot path
@@ -435,8 +439,11 @@ def make_distributed_revoke(mesh, axis="data"):
 
     ``axis`` is a mesh axis name or an outermost-first tuple of them, e.g.
     ``("pod", "data")`` on the multi-pod mesh.  The table's leading (row)
-    dim is sharded over the product of those axes.  Returns a jitted fn
-    ``(sharded_table, lock_id) -> count`` (count replicated)."""
+    dim is sharded over the product of those axes.  Returns a fn
+    ``(sharded_table, lock) -> count`` (count replicated); ``lock`` may be
+    a raw lock id or any handle carrying a ``lock_id`` attribute
+    (:class:`LeaseHandle`, :class:`~.registry.RegistryHandle`) — registry
+    locks share one table, so the same collective drains any of them."""
     from jax.sharding import PartitionSpec as P
 
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
@@ -453,4 +460,10 @@ def make_distributed_revoke(mesh, axis="data"):
             in_specs=(P(axes, None), P()), out_specs=P(),
             check_vma=False)(table_sharded, lock_id)
 
-    return jax.jit(rev)
+    jitted = jax.jit(rev)
+
+    def rev_any(table_sharded, lock):
+        lid = getattr(lock, "lock_id", lock)
+        return jitted(table_sharded, jnp.asarray(lid, jnp.int32))
+
+    return rev_any

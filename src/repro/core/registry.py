@@ -1,0 +1,422 @@
+"""Multi-lock BRAVO registry: many locks, one visible-readers table.
+
+The paper's central economy is that *all* reader-writer locks in an address
+space share ONE visible-readers table while each lock adds only two small
+private fields (RBias, InhibitUntil).  The first device port
+(``core.device_bravo``) collapsed that to a single scalar ``rbias`` per
+table — so one writer's revocation disabled the fast path for EVERY lock
+multiplexed onto the table (the "shared-bias flap" in ROADMAP).
+
+:class:`BravoRegistry` restores the paper's shape on device.  It multiplexes
+up to ``MAX_LOCKS`` independent BRAVO locks over the one shared 16KB table
+and keeps the per-lock private state as *vectors*:
+
+``rbias`` — ``(MAX_LOCKS,) int32``, **device-resident**
+    Read inside the fused publish kernel: each request gathers its own
+    lock's bias lane (``kernels.ops.fused_publish_multi``), so a revocation
+    of lock A undoes only A's publishes while B..Z keep landing in the same
+    dispatch.  Mutated only by tiny donated scatter programs (arm / revoke).
+
+``inhibit_until_ns`` / ``revoke_ewma_ns`` / ``revocations`` — host vectors
+    Per-lock revocation bookkeeping for the adaptive
+    N x revocation-cost rearm policy (:func:`~.bravo.adaptive_inhibit`,
+    shared verbatim with the host BRAVO).  These live on the host because
+    the policy is driven by the host monotonic clock; the device has no
+    wall clock to compare against.
+
+Lock-id allocation & recycling
+------------------------------
+``alloc()`` hands out a *bias lane index* from a free list plus a fresh
+globally-unique lock **value** (``core.table.next_lock_id``) that readers
+publish into table slots.  Recycling an index never resurrects stale
+slots, twice over: ``free()`` scrubs every slot still publishing the old
+value (one donated ``where(table == val, 0, table)`` program — defensive
+against callers freeing with leases leaked), and the next allocation of
+that index publishes a *different* value, so even a slot that somehow
+survived cannot match the new lock's polls.
+
+Concurrency contract
+--------------------
+Same as :class:`~.device_bravo.DeviceLeaseTable`: one host mutex guards the
+host-side buffer swap; every operation is a single fused device dispatch.
+Crucially the drain gate is per lock — ``_revoking[i]`` — so a writer
+draining lock A never blocks ``rearm()`` of lock B (with the scalar table
+that gate was necessarily global).  Compact NUMA-aware locks
+(arXiv:1810.05600) motivates keeping the per-instance state this small;
+Avoiding Scalability Collapse (arXiv:1905.10818) motivates arming each
+lock's bias by its own measured revocation cost rather than a fixed
+constant.
+
+``RegistryHandle`` implements the same protocol as ``LeaseHandle``
+(``acquire`` / ``release`` / ``revoke`` / ``rearm`` + a ``lock_id``), so
+``ModelStore`` / ``PageTable`` / ``make_distributed_revoke`` accept either.
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import hash as H
+from ..kernels import ops as K
+from .bravo import DEFAULT_N, adaptive_inhibit
+from .device_bravo import (TABLE_SLOTS, _drain, _lock_limbs,
+                           _release_ids32_all_impl, _release_ids32_impl)
+from .table import next_lock_id
+
+__all__ = ["BravoRegistry", "RegistryHandle", "MAX_LOCKS"]
+
+MAX_LOCKS = 128   # one VPU lane row of bias lanes per registry
+
+
+# ---------------------------------------------------------------------------
+# Fused device programs (jitted once per shape; table/rbias donated)
+# ---------------------------------------------------------------------------
+
+
+def _acquire_impl(table, rbias_vec, reader_ids, lh, ll, lidx, val):
+    """Publish leases for int32 ``reader_ids``; ``lh``/``ll``/``lidx``/
+    ``val`` may be scalars (one lock) or (M,) vectors (requests spanning
+    locks) — the hash and the one-hot bias gather broadcast either way."""
+    tl = reader_ids.astype(jnp.uint32)
+    th = jnp.zeros_like(tl)
+    n_slots = table.shape[0] * table.shape[1]
+    slots = H.hash_slots(lh, ll, th, tl, n_slots)
+    lidx_v = jnp.zeros(tl.shape, jnp.int32) + lidx
+    ids = jnp.zeros(tl.shape, jnp.int32) + val
+    return K.fused_publish_multi(table, rbias_vec, slots, lidx_v, ids)
+
+
+def _acquire_by_index_impl(table, rbias_vec, vals_vec, lock_idx, reader_ids):
+    """Requests spanning locks addressed by bias-lane index alone: the lock
+    values (and hence hash limbs) are gathered in-graph from the registry's
+    device-resident ``vals_vec`` — nothing about the lock set crosses the
+    host boundary per call."""
+    val = vals_vec[lock_idx]
+    ll = val.astype(jnp.uint32)
+    lh = jnp.zeros_like(ll)     # lock ids are small ints: hi limb is 0
+    return _acquire_impl(table, rbias_vec, reader_ids, lh, ll, lock_idx, val)
+
+
+def _release_by_index_impl(table, vals_vec, lock_idx, reader_ids, granted):
+    val = vals_vec[lock_idx]
+    ll = val.astype(jnp.uint32)
+    lh = jnp.zeros_like(ll)
+    return _release_ids32_impl(table, reader_ids, lh, ll, granted)
+
+
+def _scatter_impl(vec, idx, v):
+    """One donated scatter serves both the rbias and lock-value vectors."""
+    return vec.at[idx].set(v)
+
+
+def _scrub_impl(table, val):
+    """Clear every slot still publishing ``val`` (recycling hygiene)."""
+    return jnp.where(table == val, 0, table)
+
+
+class _Programs(NamedTuple):
+    acquire: object
+    acquire_by_index: object
+    release: object
+    release_all: object
+    release_by_index: object
+    scatter: object
+    scrub: object
+
+
+@functools.lru_cache(maxsize=None)
+def _programs() -> _Programs:
+    """jit the fused programs once, donating the mutated buffer (table or
+    per-lock vector) via the shared :func:`~repro.kernels.ops.jit_donating`
+    policy."""
+    return _Programs(
+        acquire=K.jit_donating(_acquire_impl, 1),
+        acquire_by_index=K.jit_donating(_acquire_by_index_impl, 1),
+        release=K.jit_donating(_release_ids32_impl, 1),
+        release_all=K.jit_donating(_release_ids32_all_impl, 1),
+        release_by_index=K.jit_donating(_release_by_index_impl, 1),
+        scatter=K.jit_donating(_scatter_impl, 1),
+        scrub=K.jit_donating(_scrub_impl, 1))
+
+
+# ---------------------------------------------------------------------------
+# The registry
+# ---------------------------------------------------------------------------
+
+
+class BravoRegistry:
+    """Up to ``max_locks`` BRAVO locks multiplexed over one device table.
+
+    Thread-safe like :class:`~.device_bravo.DeviceLeaseTable`: the mutex
+    only guards the host-side buffer swap; each operation is one fused
+    device dispatch.  All per-lock policy state is vectorized (see module
+    docstring)."""
+
+    def __init__(self, slots: int = TABLE_SLOTS,
+                 max_locks: int = MAX_LOCKS, n: int = DEFAULT_N):
+        # the scan/poll kernels stream (BLOCK_ROWS, LANES) tiles
+        assert slots % (K.LANES * 8) == 0, slots
+        self.max_locks = max_locks
+        self.n = n
+        self.table = jnp.zeros((slots // K.LANES, K.LANES), jnp.int32)
+        self.rbias = jnp.zeros((max_locks,), jnp.int32)
+        self.lock_vals = jnp.zeros((max_locks,), jnp.int32)  # device mirror
+        self._mu = threading.Lock()
+        # per-lock policy vectors (host clock drives the rearm policy)
+        self.inhibit_until_ns = np.zeros(max_locks, np.int64)
+        self.revoke_ewma_ns = np.zeros(max_locks, np.int64)
+        self.revocations = np.zeros(max_locks, np.int64)
+        self._armed = np.zeros(max_locks, bool)      # host shadow of rbias
+        self._revoking = np.zeros(max_locks, np.int32)   # PER-LOCK drain gate
+        self._vals = np.zeros(max_locks, np.int64)   # 0 = lane unallocated
+        self._used = np.zeros(max_locks, bool)       # lane ever allocated
+        self._free = list(range(max_locks - 1, -1, -1))
+        # cached device scalars: rearm() is on the reader fast path and
+        # must not upload anything (jax.transfer_guard-clean)
+        self._one = jnp.ones((), jnp.int32)
+        self._zero = jnp.zeros((), jnp.int32)
+        self.publishes = 0
+        self.allocs = 0
+        self.recycles = 0
+
+    # ------------------------------------------------------- lock lifecycle
+    def alloc(self, name: Optional[str] = None) -> "RegistryHandle":
+        """Allocate a lock: a free bias lane + a fresh lock value, armed."""
+        with self._mu:
+            if not self._free:
+                raise RuntimeError(f"registry full ({self.max_locks} locks)")
+            idx = self._free.pop()
+            val = next_lock_id()
+            self.allocs += 1
+            self.recycles += int(self._used[idx])
+            self._used[idx] = True
+            self._vals[idx] = val
+            self._armed[idx] = True
+            self._revoking[idx] = 0
+            self.inhibit_until_ns[idx] = 0
+            self.revoke_ewma_ns[idx] = 0
+            self.revocations[idx] = 0
+            i = jnp.asarray(idx, jnp.int32)
+            self.rbias = _programs().scatter(self.rbias, i, self._one)
+            self.lock_vals = _programs().scatter(self.lock_vals, i,
+                                                 jnp.asarray(val, jnp.int32))
+        return RegistryHandle(self, idx, val, name=name)
+
+    # DeviceLeaseTable API parity: engine code can treat either as a factory
+    handle = alloc
+
+    def free(self, h: "RegistryHandle", wait_s: float = 5.0) -> None:
+        """Recycle ``h``'s bias lane.  Does NOT wait for readers: any slot
+        still publishing the old value is scrubbed in one donated program,
+        and the next allocation of this lane publishes a different value —
+        stale slots can never be resurrected.
+
+        It DOES wait (up to ``wait_s``) for an in-flight ``revoke`` drain
+        on this lock: recycling the lane mid-drain would let the drain's
+        bookkeeping (the ``_revoking`` decrement, the inhibit stamp) land
+        on the lane's NEXT tenant."""
+        deadline = time.monotonic() + wait_s
+        while True:
+            with self._mu:
+                if h.closed:
+                    return
+                if not self._revoking[h.idx]:
+                    h.closed = True
+                    idx = h.idx
+                    i = jnp.asarray(idx, jnp.int32)
+                    self.rbias = _programs().scatter(self.rbias, i,
+                                                     self._zero)
+                    self.lock_vals = _programs().scatter(self.lock_vals, i,
+                                                         self._zero)
+                    self.table = _programs().scrub(
+                        self.table, jnp.asarray(h.lock_id, jnp.int32))
+                    self._vals[idx] = 0
+                    self._armed[idx] = False
+                    self._free.append(idx)
+                    return
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"free({h.name}): revocation drain still in flight")
+            time.sleep(0.0005)
+
+    @staticmethod
+    def _check_open(h: "RegistryHandle") -> None:
+        # a freed handle's lane may already belong to a NEW lock: an
+        # acquire through it would be granted under the new tenant's bias
+        # yet publish the DEAD lock value (undrainable by any live
+        # revoke), and a release would blindly zero whatever slots it
+        # hashes to — possibly a live lease of the lane's next tenant
+        if h.closed:
+            raise RuntimeError(f"{h.name}: handle used after free()")
+
+    # -------------------------------------------------------------- readers
+    def acquire(self, h: "RegistryHandle", reader_ids: jax.Array) -> jax.Array:
+        """Publish leases for device-resident int32 ``reader_ids`` under
+        ``h``'s lock; returns the granted mask without synchronizing."""
+        with self._mu:
+            self._check_open(h)
+            self.table, granted = _programs().acquire(
+                self.table, self.rbias, reader_ids, h._lh, h._ll,
+                h._idx, h._val)
+            self.publishes += 1
+        return granted
+
+    def release(self, h: "RegistryHandle", reader_ids: jax.Array,
+                granted: Optional[jax.Array] = None) -> None:
+        """Clear leases; pass acquire's ``granted`` mask so denied readers
+        never clear the slot they collided into."""
+        with self._mu:
+            self._check_open(h)
+            if granted is None:
+                self.table = _programs().release_all(
+                    self.table, reader_ids, h._lh, h._ll)
+            else:
+                self.table = _programs().release(
+                    self.table, reader_ids, h._lh, h._ll, granted)
+
+    def acquire_by_index(self, lock_idx: jax.Array,
+                         reader_ids: jax.Array) -> jax.Array:
+        """One fused dispatch for a request batch SPANNING locks: each
+        request names its lock by bias-lane index (device int32).  Lock
+        values/limbs are gathered in-graph from the device-resident
+        mirror — zero host traffic about which locks are involved."""
+        with self._mu:
+            self.table, granted = _programs().acquire_by_index(
+                self.table, self.rbias, self.lock_vals, lock_idx, reader_ids)
+            self.publishes += 1
+        return granted
+
+    def release_by_index(self, lock_idx: jax.Array, reader_ids: jax.Array,
+                         granted: jax.Array) -> None:
+        with self._mu:
+            self.table = _programs().release_by_index(
+                self.table, self.lock_vals, lock_idx, reader_ids, granted)
+
+    # ------------------------------------------------------------ the writer
+    def revoke(self, h: "RegistryHandle", *, n: Optional[int] = None,
+               wait_poll_s: float = 0.0005, max_wait_s: float = 5.0,
+               pipeline_depth: int = 2) -> int:
+        """Clear ``h``'s bias lane (only!), drain its leases, and set its
+        per-lock inhibit deadline from its measured revocation cost.  Other
+        locks' biases, drains and rearms are untouched throughout."""
+        n = self.n if n is None else n
+        idx = h.idx
+        with self._mu:
+            self._check_open(h)
+            self.rbias = _programs().scatter(self.rbias, h._idx, self._zero)
+            self._armed[idx] = False
+            self._revoking[idx] += 1
+            self.revocations[idx] += 1
+
+        def poll_live(lid):
+            # dispatch under the mutex: the scan is ordered on the current
+            # table buffer BEFORE any later acquire/release donates it
+            with self._mu:
+                return K.revocation_poll(self.table, lid)
+
+        try:
+            start = time.monotonic_ns()
+            scans = _drain(poll_live, h.lock_id, wait_poll_s=wait_poll_s,
+                           max_wait_s=max_wait_s,
+                           pipeline_depth=pipeline_depth)
+            now = time.monotonic_ns()
+            with self._mu:
+                ewma, window = adaptive_inhibit(
+                    int(self.revoke_ewma_ns[idx]), now - start, n)
+                self.revoke_ewma_ns[idx] = ewma
+                self.inhibit_until_ns[idx] = now + window
+        finally:
+            with self._mu:
+                self._revoking[idx] -= 1
+        return scans
+
+    def rearm(self, h: "RegistryHandle") -> bool:
+        """Re-arm ``h``'s bias iff ITS drain count is zero and ITS inhibit
+        window has passed — a drain in flight on lock A never gates lock
+        B's rearm (the multi-lock fix over the scalar table's global
+        gate)."""
+        idx = h.idx
+        with self._mu:
+            self._check_open(h)
+            if self._armed[idx]:
+                return True               # no dispatch on the hot path
+            if self._revoking[idx]:
+                return False              # never re-bias under OUR drain
+            if time.monotonic_ns() >= int(self.inhibit_until_ns[idx]):
+                self.rbias = _programs().scatter(self.rbias, h._idx,
+                                                 self._one)
+                self._armed[idx] = True
+                return True
+        return False
+
+    # ---------------------------------------------------------------- stats
+    def held(self, h: "RegistryHandle") -> int:
+        """Hold count for one lock (synchronizing; off the hot path)."""
+        with self._mu:
+            return int(K.revocation_poll(self.table, h.lock_id))
+
+    def held_multi(self, handles) -> np.ndarray:
+        """Exact per-lock hold counts in ONE table pass (synchronizing)."""
+        vals = jnp.asarray([h.lock_id for h in handles], jnp.int32)
+        with self._mu:
+            return np.asarray(K.revocation_poll_multi(self.table, vals))
+
+    def stats(self) -> dict:
+        """Synchronizing summary; call off the hot path."""
+        with self._mu:
+            live = int((self._vals != 0).sum())
+            return {"max_locks": self.max_locks,
+                    "live_locks": live,
+                    "allocs": self.allocs,
+                    "recycles": self.recycles,
+                    "publishes": self.publishes,
+                    "revocations": int(self.revocations.sum()),
+                    "armed": int(self._armed.sum()),
+                    "rbias_armed": int(jnp.sum(self.rbias))}
+
+
+class RegistryHandle:
+    """One lock's view of a :class:`BravoRegistry`.
+
+    Protocol-compatible with :class:`~.device_bravo.LeaseHandle` (acquire /
+    release / revoke / rearm, plus ``lock_id``), so the serving engine's
+    ``ModelStore``/``PageTable`` and ``make_distributed_revoke`` take
+    either.  Caches the device-resident lock limbs / lane index so the
+    steady state transfers nothing."""
+
+    def __init__(self, registry: BravoRegistry, idx: int, lock_id: int,
+                 name: Optional[str] = None):
+        self.registry = registry
+        self.idx = idx                 # bias lane in rbias[...]
+        self.lock_id = lock_id         # value published into table slots
+        self.name = name or f"reglock{idx}"
+        self.closed = False
+        self._lh, self._ll = _lock_limbs(lock_id)
+        self._idx = jnp.asarray(idx, jnp.int32)
+        self._val = jnp.asarray(lock_id, jnp.int32)
+
+    def acquire(self, reader_ids: jax.Array) -> jax.Array:
+        return self.registry.acquire(self, reader_ids)
+
+    def release(self, reader_ids: jax.Array,
+                granted: Optional[jax.Array] = None) -> None:
+        self.registry.release(self, reader_ids, granted=granted)
+
+    def revoke(self, **kw) -> int:
+        return self.registry.revoke(self, **kw)
+
+    def rearm(self) -> bool:
+        return self.registry.rearm(self)
+
+    def held(self) -> int:
+        return self.registry.held(self)
+
+    def free(self) -> None:
+        self.registry.free(self)

@@ -10,15 +10,26 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .table_publish import _fused_publish_call, _publish_call
-from .table_scan import LANES, _poll_call, _scan_call
+from .table_publish import (_fused_publish_call, _fused_publish_multi_call,
+                            _publish_call)
+from .table_scan import LANES, _multi_poll_call, _poll_call, _scan_call
 
-__all__ = ["as_table2d", "revocation_scan", "revocation_poll", "publish",
-           "clear", "fused_publish", "fused_clear", "LANES"]
+__all__ = ["as_table2d", "revocation_scan", "revocation_poll",
+           "revocation_poll_multi", "publish", "clear", "fused_publish",
+           "fused_publish_multi", "fused_clear", "jit_donating", "LANES"]
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def jit_donating(fn, n_donated: int, **jit_kw):
+    """``jax.jit`` donating the first ``n_donated`` args — except on CPU
+    (the validation backend), which ignores donation and would warn on
+    every compile.  One policy for every lease/registry/pool program."""
+    donating = jax.default_backend() != "cpu"
+    return jax.jit(fn, donate_argnums=tuple(range(n_donated))
+                   if donating else (), **jit_kw)
 
 
 def as_table2d(table_flat: jax.Array) -> jax.Array:
@@ -75,8 +86,28 @@ def fused_clear(table2d: jax.Array, slots: jax.Array) -> jax.Array:
     return out
 
 
+def fused_publish_multi(table2d: jax.Array, rbias_vec: jax.Array,
+                        slots: jax.Array, lock_idx: jax.Array,
+                        ids: jax.Array):
+    """Multi-lock batched CAS(0 -> id): each request is rechecked against
+    its OWN lock's bias, gathered from the registry's per-lock ``rbias_vec``
+    inside the kernel (no host rbias read, no cross-lock undo).
+
+    -> (new table [in place], granted bool (M,)).  The input table buffer is
+    consumed (aliased); callers must use the returned array."""
+    return _fused_publish_multi_call(table2d, rbias_vec, slots, lock_idx,
+                                     ids, interpret=_interpret())
+
+
 def revocation_poll(table2d: jax.Array, lock_id) -> jax.Array:
     """Early-exit drain poll: 0 iff no slot publishes ``lock_id``; otherwise
     a positive lower bound on the hold count (see ``_poll_kernel``)."""
     return _poll_call(table2d, jnp.asarray(lock_id, table2d.dtype),
                       interpret=_interpret())
+
+
+def revocation_poll_multi(table2d: jax.Array, lock_ids) -> jax.Array:
+    """Exact hold counts for a vector of lock values in ONE table pass —
+    the registry's many-locks drain; never touches any lock's bias."""
+    return _multi_poll_call(table2d, jnp.asarray(lock_ids, table2d.dtype),
+                            interpret=_interpret())

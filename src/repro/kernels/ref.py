@@ -42,3 +42,34 @@ def publish_ref(table2d: jax.Array, slots: jax.Array, ids: jax.Array,
 def clear_ref(table2d: jax.Array, slots: jax.Array):
     zeros = jnp.zeros_like(slots)
     return publish_ref(table2d, slots, zeros, unconditional=True)[0]
+
+
+def publish_multi_ref(table2d: jax.Array, rbias_vec: jax.Array,
+                      slots: jax.Array, lock_idx: jax.Array,
+                      ids: jax.Array):
+    """Sequential-CAS semantics with per-request lock bias: a request whose
+    lock's bias is clear never attempts its CAS (so it neither wins nor
+    shadows a later in-batch request for the same slot).
+
+    -> (new table, granted bool (M,)).
+    """
+    rows, lanes = table2d.shape
+    flat = table2d.reshape(-1)
+    m = slots.shape[0]
+    idx = jnp.arange(m)
+    biased = rbias_vec[lock_idx] != 0
+    dup_earlier = (slots[None, :] == slots[:, None]) \
+        & (idx[None, :] < idx[:, None]) & biased[None, :]
+    first = ~jnp.any(dup_earlier, axis=1)
+    free = flat[slots] == 0
+    granted = first & free & biased
+    new_flat = flat.at[jnp.where(granted, slots, flat.size)].set(
+        ids.astype(flat.dtype), mode="drop")
+    return new_flat.reshape(rows, lanes), granted
+
+
+def multi_count_ref(table2d: jax.Array, lock_ids: jax.Array) -> jax.Array:
+    """-> (K,) int32 exact hold counts (oracle for revocation_poll_multi)."""
+    return jnp.sum((table2d.reshape(-1)[:, None]
+                    == lock_ids[None, :].astype(table2d.dtype))
+                   .astype(jnp.int32), axis=0)

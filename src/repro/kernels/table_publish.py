@@ -25,6 +25,17 @@ Two generations live here:
     is updated in place instead of copied per call; ``unconditional=True``
     is the release path (store ``ids`` regardless of occupancy — with 0 ids
     that clears the slots).
+
+``_fused_publish_multi_call`` (the multi-lock registry hot path)
+    Same one-hot publish, but the scalar rbias operand becomes the
+    registry's *per-lock bias vector* and each request carries a lock
+    index: the kernel gathers ``rbias[lock_idx]`` with a (M, L) one-hot
+    inside the program, so one dispatch can publish leases for requests
+    spanning many locks and the recheck/undo applies per request — a
+    revoked lock's requests are undone while every other lock's requests
+    land.  An unbiased request never attempts its CAS, so (matching the
+    sequential semantics where a fast path not taken leaves the slot free)
+    it does not shadow a later in-batch request for the same slot.
 """
 
 from __future__ import annotations
@@ -181,5 +192,92 @@ def _fused_publish_call(table2d: jax.Array, rbias: jax.Array,
         interpret=interpret,
     )(table2d, rbias.reshape(1, 1).astype(jnp.int32),
       slots.reshape(1, m).astype(jnp.int32),
+      ids.reshape(1, m).astype(table2d.dtype))
+    return table_out, granted[0].astype(jnp.bool_)
+
+
+# ---------------------------------------------------------------------------
+# Multi-lock fused publish: per-request rbias gathered by lock index
+# ---------------------------------------------------------------------------
+
+
+def _fused_publish_multi_kernel(table_ref, rbias_ref, slots_ref, lidx_ref,
+                                ids_ref, out_table_ref, granted_ref):
+    table = table_ref[...]                       # (rows, LANES) int32
+    rows = table.shape[0]
+    slots = slots_ref[0, :]                      # (M,) int32
+    lidx = lidx_ref[0, :]                        # (M,) int32, in [0, L)
+    ids = ids_ref[0, :]
+    m = slots.shape[0]
+    n_locks = rbias_ref.shape[1]
+    r_idx = slots // LANES
+    c_idx = slots % LANES
+
+    # per-request bias: gather rbias[lock_idx] via a (M, L) one-hot — the
+    # registry's per-lock recheck, in kernel (no host rbias read)
+    oh_l = (lidx[:, None]
+            == jax.lax.broadcasted_iota(jnp.int32, (m, n_locks), 1)
+            ).astype(jnp.int32)                  # (M, L)
+    rb_ok = jnp.sum(oh_l * rbias_ref[0, :][None, :], axis=1) != 0   # (M,)
+
+    oh_r = (r_idx[:, None]
+            == jax.lax.broadcasted_iota(jnp.int32, (m, rows), 1)
+            ).astype(jnp.int32)                  # (M, rows)
+    oh_c = (c_idx[:, None]
+            == jax.lax.broadcasted_iota(jnp.int32, (m, LANES), 1)
+            ).astype(jnp.int32)                  # (M, LANES)
+
+    # sequential-CAS collision semantics among *attempting* requests only:
+    # an unbiased request never CASes, so it must not shadow a later
+    # in-batch request for the same slot
+    order = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)   # row = request
+    dup_earlier = (slots[None, :] == slots[:, None]) \
+        & (order.T < order) & rb_ok[None, :]     # [i, j]: j < i attempted
+    first = ~jnp.any(dup_earlier, axis=1)        # (M,)
+
+    cur = jnp.sum(jnp.dot(oh_r, table) * oh_c, axis=1)       # (M,) occupancy
+    win = first & (cur == 0) & rb_ok
+
+    winv = win.astype(jnp.int32)
+    delta = jnp.dot((oh_r * winv[:, None]).T, oh_c * ids[:, None])
+    out_table_ref[...] = table + delta           # winners hit free slots
+    granted_ref[0, :] = win.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fused_publish_multi_call(table2d: jax.Array, rbias_vec: jax.Array,
+                              slots: jax.Array, lock_idx: jax.Array,
+                              ids: jax.Array, interpret: bool = False):
+    """-> (new table [aliased onto the input buffer], granted bool (M,)).
+
+    ``rbias_vec`` is the registry's (L,) int32 per-lock bias vector;
+    ``lock_idx`` maps each request to its lock's bias lane."""
+    rows, lanes = table2d.shape
+    assert lanes == LANES, table2d.shape
+    m = slots.shape[0]
+    n_locks = rbias_vec.shape[0]
+    table_out, granted = pl.pallas_call(
+        _fused_publish_multi_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_locks), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), table2d.dtype),
+            jax.ShapeDtypeStruct((1, m), jnp.int8),
+        ],
+        input_output_aliases={0: 0},     # table updated in place, no copy
+        interpret=interpret,
+    )(table2d, rbias_vec.reshape(1, n_locks).astype(jnp.int32),
+      slots.reshape(1, m).astype(jnp.int32),
+      lock_idx.reshape(1, m).astype(jnp.int32),
       ids.reshape(1, m).astype(table2d.dtype))
     return table_out, granted[0].astype(jnp.bool_)

@@ -82,6 +82,48 @@ def _poll_kernel(lock_ref, table_ref, count_ref):
         count_ref[0, 0] = jnp.sum((blk == lock_ref[0, 0]).astype(jnp.int32))
 
 
+def _multi_poll_kernel(locks_ref, table_ref, counts_ref):
+    """Per-lock hold counts for a *vector* of lock values, one table pass.
+
+    The registry drains several locks at once (e.g. freeing a striped KV
+    pool) and must poll each lock without disturbing any other lock's bias:
+    polling never touches rbias at all, and one streamed pass produces all
+    K counts instead of K scans.  The (rows*LANES, K) compare keeps every
+    intermediate rank-2 for the VPU.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    blk = table_ref[...]                       # (BLOCK_ROWS, 128)
+    flat = blk.reshape(-1, 1)                  # (BLOCK_ROWS*128, 1)
+    m = (flat == locks_ref[0, :][None, :])     # (BLOCK_ROWS*128, K)
+    counts_ref[0, :] += jnp.sum(m.astype(jnp.int32), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _multi_poll_call(table2d: jax.Array, lock_ids: jax.Array,
+                     interpret: bool = False) -> jax.Array:
+    """-> (K,) int32 exact hold counts, one count per entry of ``lock_ids``."""
+    rows, lanes = table2d.shape
+    assert lanes == LANES and rows % BLOCK_ROWS == 0, table2d.shape
+    k = lock_ids.shape[0]
+    grid = (rows // BLOCK_ROWS,)
+    locks = jnp.reshape(lock_ids.astype(table2d.dtype), (1, k))
+    counts = pl.pallas_call(
+        _multi_poll_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, k), jnp.int32),
+        interpret=interpret,
+    )(locks, table2d)
+    return counts[0, :]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def _poll_call(table2d: jax.Array, lock_id: jax.Array,
                interpret: bool = False) -> jax.Array:

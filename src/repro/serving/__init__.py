@@ -1,3 +1,4 @@
+from .kv_pool import KVPool
 from .steps import make_decode_step, make_prefill_step
 
-__all__ = ["make_decode_step", "make_prefill_step"]
+__all__ = ["KVPool", "make_decode_step", "make_prefill_step"]

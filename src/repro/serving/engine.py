@@ -20,13 +20,19 @@ metrics report both throughput and the per-lock BRAVO statistics so the
 effect is observable.
 
 With ``device_leases=True`` (default) the epoch reads are additionally
-routed through the *device*-side batched lease API
-(``core.device_bravo.DeviceLeaseTable``): each decode step publishes the
-whole batch's request ids into an on-device lease table in one fused,
-donation-aliased program (zero host sync), and the weight updater / page
-compactor revoke those leases BRAVO-style before mutating.  The device
-table mirrors reader occupancy for the device-resident data plane the
-host locks can't see into.
+routed through the *device*-side batched lease API: the engine builds ONE
+``core.registry.BravoRegistry`` — one shared visible-readers table for the
+whole address space, the paper's economy — and every guarded resource is a
+registry lock with its own bias lane: the model-epoch lock, and the KV
+pool's striped page locks.  Each decode step publishes the whole batch's
+request ids in one fused, donation-aliased program (zero host sync), and
+the weight updater / page compactor revoke ONLY their own lock's bias
+before mutating — a weight swap no longer flaps the page locks' fast path
+(nor vice versa), which the old one-scalar-rbias-per-table design could
+not express.  The paged-KV map itself is device-resident
+(``serving.kv_pool.KVPool``): allocate/reclaim/lookup are donated device
+programs, eliminating the host-side numpy owner array and Python free
+list.
 """
 
 from __future__ import annotations
@@ -35,18 +41,23 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.atomics import LiveMem
-from ..core.device_bravo import DeviceLeaseTable, LeaseHandle
+from ..core.device_bravo import LeaseHandle
 from ..core.factory import LockEnv
+from ..core.registry import BravoRegistry, RegistryHandle
 from ..models import model as M
 from ..models.common import ModelConfig
+from .kv_pool import KVPool
 from .steps import make_decode_step, make_prefill_step
+
+# device lease handles share one protocol (acquire/release/revoke/rearm)
+Lease = Optional[Union[LeaseHandle, RegistryHandle]]
 
 
 @dataclasses.dataclass
@@ -71,9 +82,10 @@ class EngineStats:
 
 class ModelStore:
     """Epoch-versioned weights, guarded by a reader-writer lock (and,
-    optionally, by a device-side lease table mirroring the readers)."""
+    optionally, by a device-side lease handle mirroring the readers — a
+    plain ``LeaseHandle`` or a registry lock; same protocol)."""
 
-    def __init__(self, params, lock, leases: Optional[LeaseHandle] = None):
+    def __init__(self, params, lock, leases: Lease = None):
         self.params = params
         self.epoch = 0
         self.lock = lock
@@ -124,22 +136,41 @@ class ModelStore:
 
 
 class PageTable:
-    """Host-side paged-KV bookkeeping (page -> request map), rwlock-guarded.
+    """Paged-KV bookkeeping (page -> request map), rwlock-guarded.
 
-    The device KV cache is a fixed pool; handlers *read* the mapping every
-    step; the compactor *writes* it when reclaiming pages."""
+    Two backings share the API:
 
-    def __init__(self, n_pages: int, lock,
-                 leases: Optional[LeaseHandle] = None):
+    * ``pool`` (the default in the engine): the map lives on DEVICE in a
+      :class:`~repro.serving.kv_pool.KVPool` — allocate/reclaim/lookup are
+      donated device programs and reads take registry stripe leases; the
+      host rwlock stays as the thread-level write exclusion the pool
+      requires of its callers.
+    * host mode (``pool=None``): the legacy numpy owner array + Python
+      free list, optionally mirrored by a single device lease handle."""
+
+    def __init__(self, n_pages: int, lock, leases: Lease = None,
+                 pool: Optional[KVPool] = None):
         self.lock = lock
         self.leases = leases
-        self.owner = np.full((n_pages,), -1, np.int64)
-        self.free: List[int] = list(range(n_pages))
+        self.pool = pool
+        if pool is None:
+            self.owner = np.full((n_pages,), -1, np.int64)
+            self._free: List[int] = list(range(n_pages))
+
+    @property
+    def free(self) -> List[int]:
+        """Free pages: the live Python free list (host mode) or a
+        synchronized snapshot of the device pool (off the hot path)."""
+        if self.pool is not None:
+            return self.pool.free_pages()
+        return self._free
 
     def lookup(self, rid: int) -> List[int]:
         tok = self.lock.acquire_read()
         ids = granted = None
         try:
+            if self.pool is not None:
+                return self.pool.lookup(rid)
             if self.leases is not None:
                 # control plane: rid arrives as a host int, so this read
                 # pays one tiny H2D upload (the decode fast path amortizes
@@ -156,14 +187,40 @@ class PageTable:
                 self.leases.release(ids, granted=granted)
             self.lock.release_read(tok)
 
+    def read_batch(self, rids: jax.Array):
+        """Per-decode-step page-map read for a device-resident rid batch:
+        one fused stripe-lease publish + ownership mask, zero host sync.
+        Returns ``(token, mask)`` (mask None in host mode); the host read
+        lock AND the stripe leases are held until ``done_read_batch`` —
+        an allocate/reclaim on an involved stripe drains until then."""
+        tok = self.lock.acquire_read()
+        if self.pool is None:
+            return (tok, None), None
+        try:
+            ptok, mask = self.pool.read_batch(rids)
+        except BaseException:          # never leak the host read lock
+            self.lock.release_read(tok)
+            raise
+        return (tok, ptok), mask
+
+    def done_read_batch(self, token) -> None:
+        host_tok, ptok = token
+        try:
+            if ptok is not None:
+                self.pool.done_read_batch(ptok)
+        finally:
+            self.lock.release_read(host_tok)
+
     def allocate(self, rid: int, n: int) -> List[int]:
         tok = self.lock.acquire_write()
         try:
+            if self.pool is not None:
+                return self.pool.allocate(rid, n)
             if self.leases is not None:
                 self.leases.revoke()
-            if len(self.free) < n:
+            if len(self._free) < n:
                 return []
-            pages = [self.free.pop() for _ in range(n)]
+            pages = [self._free.pop() for _ in range(n)]
             self.owner[pages] = rid
             return pages
         finally:
@@ -172,12 +229,27 @@ class PageTable:
     def reclaim(self, rid: int) -> int:
         tok = self.lock.acquire_write()
         try:
+            if self.pool is not None:
+                return self.pool.reclaim(rid)
             if self.leases is not None:
                 self.leases.revoke()
             pages = list(np.where(self.owner == rid)[0])
             self.owner[pages] = -1
-            self.free.extend(pages)
+            self._free.extend(pages)
             return len(pages)
+        finally:
+            self.lock.release_write(tok)
+
+    def compact(self) -> None:
+        """Background compaction tick (host mode keeps its free list
+        sorted; the device pool's first-fit needs no defragmentation, so
+        pool mode must not pay a write acquire — on a BRAVO host lock that
+        is a bias revocation stalling every reader — to guard a no-op)."""
+        if self.pool is not None:
+            return
+        tok = self.lock.acquire_write()
+        try:
+            self._free.sort()
         finally:
             self.lock.release_write(tok)
 
@@ -187,24 +259,26 @@ class ServingEngine:
                  lock_name: str = "bravo-ba", handlers: int = 4,
                  max_seq: int = 128, slots_per_handler: int = 4,
                  n_pages: int = 4096, env: Optional[LockEnv] = None,
-                 device_leases: bool = True):
+                 device_leases: bool = True, kv_stripes: int = 4):
         self.cfg = cfg
         self.mesh = mesh
         self.rules = rules
         self.env = env or LockEnv(LiveMem())
-        self.lease_tables: Dict[str, DeviceLeaseTable] = {}
-        model_h = pages_h = None
+        self.registry: Optional[BravoRegistry] = None
+        self.kv_pool: Optional[KVPool] = None
+        model_h = pool = None
         if device_leases:
-            # one table (hence one rbias) per guarded resource, matching
-            # BRAVO's per-lock bias rather than a process-global flag
-            self.lease_tables = {"model": DeviceLeaseTable(),
-                                 "pages": DeviceLeaseTable()}
-            model_h = self.lease_tables["model"].handle()
-            pages_h = self.lease_tables["pages"].handle()
+            # ONE registry = one shared visible-readers table for every
+            # device lock in the address space (the paper's economy); each
+            # guarded resource gets its own bias lane, so a weight swap's
+            # revocation never flaps the page locks' fast path
+            self.registry = BravoRegistry()
+            model_h = self.registry.alloc(name="model")
+            self.kv_pool = pool = KVPool(n_pages, registry=self.registry,
+                                         stripes=kv_stripes)
         self.store = ModelStore(params, self.env.make(lock_name),
                                 leases=model_h)
-        self.pages = PageTable(n_pages, self.env.make(lock_name),
-                               leases=pages_h)
+        self.pages = PageTable(n_pages, self.env.make(lock_name), pool=pool)
         self.lock_name = lock_name
         self.handlers = handlers
         self.max_seq = max_seq
@@ -271,12 +345,19 @@ class ServingEngine:
         max_new = max(r.max_new for r in reqs)
         for step in range(S - 1 + max_new):
             clen = jnp.full((B,), step + 1, jnp.int32)
-            rtok, params_now, _ = self.store.read_batch(rid_dev)
+            # page-map read held across the step: the stripe leases (and
+            # host read lock) pin the batch's pages until the decode
+            # dispatch is in — a compactor on those stripes drains first
+            ptok, _page_mask = self.pages.read_batch(rid_dev)
             try:
-                nxt, logits, caches = self._decode(params_now, caches,
-                                                   cur, clen)
+                rtok, params_now, _ = self.store.read_batch(rid_dev)
+                try:
+                    nxt, logits, caches = self._decode(params_now, caches,
+                                                       cur, clen)
+                finally:
+                    self.store.done_read_batch(rtok, rid_dev)
             finally:
-                self.store.done_read_batch(rtok, rid_dev)
+                self.pages.done_read_batch(ptok)
             with self._stats_lock:
                 self.stats.decode_steps += 1
                 self.stats.read_acquires += 1
@@ -305,11 +386,7 @@ class ServingEngine:
 
     def _compactor(self, period_s: float):
         while not self._stop.wait(period_s):
-            tok = self.pages.lock.acquire_write()
-            try:
-                self.pages.free.sort()
-            finally:
-                self.pages.lock.release_write(tok)
+            self.pages.compact()
             with self._stats_lock:
                 self.stats.compactions += 1
 
@@ -351,7 +428,7 @@ class ServingEngine:
             st = getattr(lk, "stats", None)
             if st is not None:
                 out[name] = dataclasses.asdict(st)
-        if self.lease_tables:
-            out["device_leases"] = {k: t.stats()
-                                    for k, t in self.lease_tables.items()}
+        if self.registry is not None:
+            out["device_leases"] = self.registry.stats()
+            out["kv_pool"] = self.kv_pool.stats()
         return out

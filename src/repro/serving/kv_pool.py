@@ -1,0 +1,224 @@
+"""Device-resident paged-KV pool with registry reader locks.
+
+ROADMAP named the serving engine's paged-KV cache as the last host-side
+bookkeeping on the data plane: ``PageTable`` kept a numpy ``owner`` array
+and a Python free list, so every allocate/reclaim/lookup round-tripped the
+page map through the host.  :class:`KVPool` moves the map onto the device:
+
+* ``owner`` is a device-resident ``(n_pages,) int32`` vector (-1 = free);
+  allocation, reclamation and lookup are single donated jit programs
+  (rank/cumsum-based first-fit, masked scatter, equality masks) — the page
+  map never materializes on the host on the hot path.
+* The per-page reader locks are **registry locks sharing the global
+  visible-readers table**: pages are striped over ``stripes`` locks from a
+  :class:`~repro.core.registry.BravoRegistry` (per-page locks at KV scale
+  would exhaust bias lanes; striping keeps per-lock state tiny, exactly the
+  compact-lock economy of arXiv:1810.05600).  Readers publish leases on
+  their request's stripe; a writer (allocate/reclaim) revokes only that
+  stripe's bias, so compaction on one stripe never flaps the bias of the
+  other stripes — or of any other lock in the address space.
+* The batch read fast path (:meth:`lookup_batch`) is ONE fused lease
+  publish for a device-resident rid vector — stripe indices, lock values
+  and hash limbs are all gathered in-graph (``acquire_by_index``), so a
+  steady-state decode step moves zero bytes between host and device.
+
+Writers must hold external write exclusion (the engine's host rwlock) —
+the pool revokes/drains device leases, it does not arbitrate host threads.
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.registry import BravoRegistry
+
+__all__ = ["KVPool", "FREE"]
+
+FREE = -1
+
+
+# ---------------------------------------------------------------------------
+# Device programs (owner vector donated; first-fit via rank of free pages)
+# ---------------------------------------------------------------------------
+
+
+def _alloc_impl(owner, rid, n):
+    """``n`` is a TRACED scalar: request sizes vary per prompt, and a
+    static n would recompile this program for every distinct page count on
+    the serving path.  The taken-pages result is a mask (static shape); the
+    caller derives indices host-side — allocate synchronizes anyway."""
+    free = owner < 0
+    rank = jnp.cumsum(free.astype(jnp.int32))       # 1-based among free
+    enough = rank[-1] >= n
+    take = free & (rank <= n) & enough
+    new_owner = jnp.where(take, rid, owner)
+    return new_owner, take, enough
+
+
+def _reclaim_impl(owner, rid):
+    mine = owner == rid
+    return jnp.where(mine, FREE, owner), jnp.sum(mine.astype(jnp.int32))
+
+
+def _mask_impl(owner, rid):
+    return owner == rid
+
+
+def _mask_batch_impl(owner, rids):
+    return owner[None, :] == rids[:, None]          # (B, n_pages)
+
+
+def _free_count_impl(owner):
+    return jnp.sum((owner < 0).astype(jnp.int32))
+
+
+def _stripe_lanes_impl(stripe_idx, rids, *, stripes: int):
+    return stripe_idx[rids % stripes]
+
+
+class _Programs(NamedTuple):
+    alloc: object
+    reclaim: object
+    mask: object
+    mask_batch: object
+    free_count: object
+    stripe_lanes: object    # static stripes
+
+
+@functools.lru_cache(maxsize=None)
+def _programs() -> _Programs:
+    from ..kernels.ops import jit_donating
+
+    return _Programs(
+        alloc=jit_donating(_alloc_impl, 1),
+        reclaim=jit_donating(_reclaim_impl, 1),
+        mask=jax.jit(_mask_impl),
+        mask_batch=jax.jit(_mask_batch_impl),
+        free_count=jax.jit(_free_count_impl),
+        stripe_lanes=jax.jit(_stripe_lanes_impl,
+                             static_argnames=("stripes",)))
+
+
+class KVPool:
+    """Fixed pool of KV pages, map on device, reads under registry leases.
+
+    ``registry`` may be shared with other subsystems (the engine passes the
+    one registry whose table also serves the model-epoch lock — the paper's
+    one-table-per-address-space economy); a private one is built if
+    omitted."""
+
+    def __init__(self, n_pages: int, registry: Optional[BravoRegistry] = None,
+                 stripes: int = 4):
+        assert stripes >= 1
+        self.n_pages = n_pages
+        self.registry = registry if registry is not None else BravoRegistry()
+        self.stripes = stripes
+        self.locks = [self.registry.alloc(name=f"kvstripe{s}")
+                      for s in range(stripes)]
+        # device mirror of stripe -> bias lane, for in-graph gathers
+        self._stripe_idx = jnp.asarray([h.idx for h in self.locks], jnp.int32)
+        self.owner = jnp.full((n_pages,), FREE, jnp.int32)
+        self._mu = threading.Lock()   # guards the owner buffer swap
+        self.lookups = 0
+        self.allocates = 0
+        self.reclaims = 0
+
+    def _stripe(self, rid: int):
+        return self.locks[rid % self.stripes]
+
+    # -------------------------------------------------------------- readers
+    def lookup(self, rid: int) -> List[int]:
+        """Pages owned by ``rid``, read under the stripe's lease (control
+        plane: the host-int rid costs one tiny upload, like the legacy
+        path; the decode loop uses :meth:`lookup_batch` instead)."""
+        h = self._stripe(rid)
+        h.rearm()
+        ids = jnp.asarray([rid], jnp.int32)
+        granted = h.acquire(ids)
+        try:
+            with self._mu:
+                mask = _programs().mask(self.owner,
+                                        jnp.asarray(rid, jnp.int32))
+                self.lookups += 1
+            return list(np.where(np.asarray(mask))[0])
+        finally:
+            h.release(ids, granted=granted)
+
+    def read_batch(self, rids: jax.Array):
+        """Begin a leased batch read: ONE fused lease publish for the whole
+        device-resident rid vector (stripe lanes gathered in-graph) plus
+        one ownership mask — zero host sync.  Returns ``(token, mask)``;
+        the leases stay PUBLISHED until :meth:`done_read_batch`, so a
+        writer on any involved stripe drains until the read ends (this is
+        what makes the lease a lock and not a counter)."""
+        for h in self.locks:
+            h.rearm()                 # host-clock check; dispatch only
+        #                               when a stripe's window has passed
+        lidx = _programs().stripe_lanes(self._stripe_idx, rids,
+                                        stripes=self.stripes)
+        granted = self.registry.acquire_by_index(lidx, rids)
+        try:
+            with self._mu:
+                mask = _programs().mask_batch(self.owner, rids)
+                self.lookups += 1
+        except BaseException:         # never leak published leases
+            self.registry.release_by_index(lidx, rids, granted)
+            raise
+        return (lidx, rids, granted), mask
+
+    def done_read_batch(self, token) -> None:
+        lidx, rids, granted = token
+        self.registry.release_by_index(lidx, rids, granted)
+
+    def lookup_batch(self, rids: jax.Array) -> jax.Array:
+        """Point-in-time batch read (mask only; leases released before
+        returning — use :meth:`read_batch` to hold them across work)."""
+        token, mask = self.read_batch(rids)
+        self.done_read_batch(token)
+        return mask
+
+    # -------------------------------------------------------------- writers
+    def allocate(self, rid: int, n: int, **revoke_kw) -> List[int]:
+        """First-fit allocate ``n`` pages to ``rid`` (all-or-nothing; []
+        when the pool is short).  Revokes ONLY this rid's stripe bias —
+        reads on other stripes keep their fast path throughout."""
+        self._stripe(rid).revoke(**revoke_kw)
+        with self._mu:
+            owner, take, ok = _programs().alloc(
+                self.owner, jnp.asarray(rid, jnp.int32),
+                jnp.asarray(n, jnp.int32))
+            self.owner = owner
+            self.allocates += 1
+        if not bool(ok):
+            return []
+        return np.where(np.asarray(take))[0].tolist()
+
+    def reclaim(self, rid: int, **revoke_kw) -> int:
+        self._stripe(rid).revoke(**revoke_kw)
+        with self._mu:
+            owner, cnt = _programs().reclaim(self.owner,
+                                             jnp.asarray(rid, jnp.int32))
+            self.owner = owner
+            self.reclaims += 1
+        return int(cnt)
+
+    # ---------------------------------------------------------------- misc
+    def free_pages(self) -> List[int]:
+        """Free page indices (synchronizing; off the hot path)."""
+        with self._mu:
+            return list(np.where(np.asarray(self.owner) < 0)[0])
+
+    def free_count(self) -> int:
+        with self._mu:
+            return int(_programs().free_count(self.owner))
+
+    def stats(self) -> dict:
+        return {"n_pages": self.n_pages, "stripes": self.stripes,
+                "free": self.free_count(), "lookups": self.lookups,
+                "allocates": self.allocates, "reclaims": self.reclaims}

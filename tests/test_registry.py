@@ -1,0 +1,421 @@
+"""BravoRegistry: per-lock bias vectors over one shared table.
+
+Covers the multi-lock fused kernels against their oracles, lock isolation
+under slot overlap (hypothesis sweeps), lock-id recycling hygiene, and the
+per-lock rearm gating regression (a drain on lock A must not block rearm
+of lock B)."""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import device_bravo as DB
+from repro.core.registry import BravoRegistry
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+
+SLOTS = 1024          # small table -> overlap is likely
+
+
+def pick_readers(lock_ids, k, seen=None, start=0, slots=SLOTS):
+    """First ``k`` reader ids whose slots (under EVERY lock in
+    ``lock_ids``) are pairwise distinct and avoid ``seen`` — deterministic
+    tests must not depend on the global lock-id counter's position making
+    a hash collision (un)lucky."""
+    seen = set() if seen is None else seen
+    out, t = [], start
+    while len(out) < k:
+        cand = [int(DB.slots_for(lid, np.array([t]), slots=slots)[0])
+                for lid in lock_ids]
+        if len(set(cand)) == len(cand) and not (set(cand) & seen):
+            seen.update(cand)
+            out.append(t)
+        t += 1
+    return np.array(out, np.int64)
+
+
+def seq_oracle(table_flat, rbias, slots, lidx, ids):
+    """Plain-python sequential CAS with per-request bias: the ground truth
+    for fused_publish_multi (an unbiased request never attempts)."""
+    flat = table_flat.copy()
+    granted = []
+    for s, l, i in zip(slots, lidx, ids):
+        ok = bool(rbias[l]) and flat[s] == 0
+        if ok:
+            flat[s] = i
+        granted.append(ok)
+    return flat, np.array(granted, bool)
+
+
+# ---------------------------------------------------------------------------
+# Multi-lock kernels vs oracles
+# ---------------------------------------------------------------------------
+
+
+def test_fused_publish_multi_matches_sequential_oracle():
+    rng = np.random.default_rng(0)
+    table = np.zeros((8, 128), np.int32)
+    occ = rng.choice(1024, 40, replace=False)
+    table.reshape(-1)[occ] = 777
+    rbias = np.ones(32, np.int32)
+    rbias[[1, 5, 9]] = 0
+    m = 120
+    slots = rng.integers(0, 1024, m).astype(np.int32)
+    slots[1] = slots[0]               # in-batch collisions
+    slots[3] = slots[2]
+    lidx = rng.integers(0, 32, m).astype(np.int32)
+    lidx[0] = 1                       # unbiased first request on a dup slot:
+    lidx[1] = 0                       # the later biased request must win
+    ids = rng.integers(1, 1 << 20, m).astype(np.int32)
+
+    tk, gk = K.fused_publish_multi(jnp.asarray(table), jnp.asarray(rbias),
+                                   jnp.asarray(slots), jnp.asarray(lidx),
+                                   jnp.asarray(ids))
+    flat, want = seq_oracle(table.reshape(-1), rbias, slots, lidx, ids)
+    np.testing.assert_array_equal(np.asarray(tk).reshape(-1), flat)
+    np.testing.assert_array_equal(np.asarray(gk), want)
+    assert not want[0] and want[1], "unbiased req must not shadow later dup"
+    # jnp ref oracle agrees
+    tr, gr = R.publish_multi_ref(jnp.asarray(table), jnp.asarray(rbias),
+                                 jnp.asarray(slots), jnp.asarray(lidx),
+                                 jnp.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(tk), np.asarray(tr))
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(gr))
+
+
+def test_revocation_poll_multi_matches_ref():
+    rng = np.random.default_rng(1)
+    table = np.zeros((16, 128), np.int32)
+    vals = [11, 22, 33]
+    for v in vals:
+        hit = rng.choice(2048, rng.integers(0, 9), replace=False)
+        table.reshape(-1)[hit] = v
+    locks = jnp.asarray(vals + [44], jnp.int32)     # 44 never published
+    ck = K.revocation_poll_multi(jnp.asarray(table), locks)
+    cr = R.multi_count_ref(jnp.asarray(table), locks)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+    assert int(np.asarray(ck)[-1]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Lock isolation on the shared table
+# ---------------------------------------------------------------------------
+
+
+def test_per_lock_bias_revocation_isolation():
+    """Revoking lock A flips ONLY A's bias lane: B's fast path, drains and
+    rearms are untouched (the shared-bias-flap fix)."""
+    reg = BravoRegistry(slots=SLOTS)
+    a, b = reg.alloc("A"), reg.alloc("B")
+    seen = set()
+    rids = jnp.asarray(pick_readers([a.lock_id, b.lock_id], 4, seen),
+                       jnp.int32)
+    extra = jnp.asarray(pick_readers([b.lock_id], 2, seen, start=100),
+                        jnp.int32)
+    ga = a.acquire(rids)
+    gb = b.acquire(rids)
+    assert np.asarray(ga).all() and np.asarray(gb).all()
+    a.release(rids, granted=ga)
+    a.revoke()
+    # A is unbiased; B grants throughout
+    assert not np.asarray(a.acquire(rids)).any()
+    gb2 = b.acquire(extra)
+    assert np.asarray(gb2).all()
+    assert b.held() == 6
+    # B's writer path still works mid-A-inhibit
+    b.release(rids, granted=gb)
+    b.release(extra, granted=gb2)
+    b.revoke()
+    reg.inhibit_until_ns[:] = 0
+    assert a.rearm() and b.rearm()
+    assert np.asarray(a.acquire(rids)).all()
+
+
+def test_registry_handles_work_with_distributed_revoke():
+    import jax
+    from jax.sharding import Mesh
+
+    reg = BravoRegistry(slots=SLOTS)
+    h = reg.alloc("dist")
+    rids = jnp.asarray(pick_readers([h.lock_id], 3), jnp.int32)
+    g = h.acquire(rids)
+    assert np.asarray(g).all()
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+    fn = DB.make_distributed_revoke(mesh, axis="data")
+    with mesh:
+        assert int(fn(reg.table, h)) == 3        # handle, not raw id
+        assert int(fn(reg.table, h.lock_id)) == 3  # raw id still accepted
+
+
+# ---------------------------------------------------------------------------
+# Property sweeps: hypothesis when available, seeded random sweeps otherwise
+# (this container's image lacks hypothesis; requirements.txt lists it)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _check_overlapping_locks(readers_a, readers_b):
+    """Two locks hashing into overlapping slot ranges of the ONE shared
+    table: every granted lease publishes its own lock's value, a collision
+    with the other lock's live slot is a denial (never an overwrite), and
+    draining one lock leaves the other's leases untouched."""
+    reg = BravoRegistry(slots=SLOTS)
+    a, b = reg.alloc("A"), reg.alloc("B")
+    ra = jnp.asarray(readers_a, jnp.int32)
+    rb = jnp.asarray(readers_b, jnp.int32)
+    ga = np.asarray(a.acquire(ra))
+    gb = np.asarray(b.acquire(rb))
+
+    flat = np.asarray(reg.table).reshape(-1)
+    slots_a = DB.slots_for(a.lock_id, np.asarray(readers_a), slots=SLOTS)
+    slots_b = DB.slots_for(b.lock_id, np.asarray(readers_b), slots=SLOTS)
+    # granted leases sit in the expected slot and carry the OWN lock's value
+    assert (flat[slots_a[ga]] == a.lock_id).all()
+    assert (flat[slots_b[gb]] == b.lock_id).all()
+    # every occupied slot belongs to exactly one of the two locks
+    assert set(np.unique(flat)) <= {0, a.lock_id, b.lock_id}
+    # a denial is always a collision with a LIVE slot (A's, or an earlier
+    # B request's) — never a free slot silently skipped
+    denied_b = slots_b[~gb]
+    assert (flat[denied_b] != 0).all()
+    # hold counts == grants, per lock, via the one-pass multi poll
+    counts = reg.held_multi([a, b])
+    assert counts[0] == ga.sum() and counts[1] == gb.sum()
+    # draining A leaves B's leases exactly in place
+    a.release(ra, granted=jnp.asarray(ga))
+    counts = reg.held_multi([a, b])
+    assert counts[0] == 0 and counts[1] == gb.sum()
+    b.release(rb, granted=jnp.asarray(gb))
+    assert not np.asarray(reg.table).any()
+
+
+def _check_recycling(leak, cycles):
+    """free() with leases still published (a caller bug) must scrub the
+    stale slots, and every reallocation of the lane publishes a fresh
+    value — no later lock ever observes a recycled predecessor's leases."""
+    reg = BravoRegistry(slots=SLOTS)
+    rids = jnp.asarray(leak, jnp.int32)
+    prev_vals = []
+    h = reg.alloc()
+    for _ in range(cycles):
+        g = np.asarray(h.acquire(rids))
+        # unique readers: the first requester per slot always wins, so at
+        # least one lease is published (intra-batch collisions may deny
+        # the rest — that's the CAS semantics, not a failure)
+        assert g.any()
+        assert h.held() == g.sum()
+        old = h.lock_id
+        lane = h.idx
+        h.free()                      # leases deliberately leaked
+        prev_vals.append(old)
+        h = reg.alloc()
+        assert h.idx == lane          # lane actually recycled
+        assert h.lock_id not in prev_vals
+        # nothing in the table matches any prior generation or the new one
+        counts = np.asarray(K.revocation_poll_multi(
+            reg.table, jnp.asarray(prev_vals + [h.lock_id], jnp.int32)))
+        assert (counts == 0).all(), counts
+        # the fresh lock is immediately usable: acquire + clean revoke
+        g2 = np.asarray(h.acquire(rids))
+        assert g2.any()
+        h.release(rids, granted=jnp.asarray(g2))
+        assert h.revoke() >= 1
+        reg.inhibit_until_ns[h.idx] = 0
+        assert h.rearm()
+    assert reg.recycles >= cycles
+
+
+if HAVE_HYPOTHESIS:
+    reader_lists = st.lists(st.integers(0, 40), min_size=1, max_size=24,
+                            unique=True)
+
+    @settings(max_examples=20, deadline=None)
+    @given(readers_a=reader_lists, readers_b=reader_lists)
+    def test_overlapping_locks_never_observe_each_others_grants(readers_a,
+                                                                readers_b):
+        _check_overlapping_locks(readers_a, readers_b)
+
+    @settings(max_examples=15, deadline=None)
+    @given(leak=st.lists(st.integers(0, 30), min_size=1, max_size=16,
+                         unique=True),
+           cycles=st.integers(1, 4))
+    def test_lock_id_recycling_never_resurrects_stale_slots(leak, cycles):
+        _check_recycling(leak, cycles)
+else:
+    @pytest.mark.parametrize("seed", range(10))
+    def test_overlapping_locks_never_observe_each_others_grants(seed):
+        rng = np.random.default_rng(seed)
+        ra = rng.choice(41, size=rng.integers(1, 25), replace=False)
+        rb = rng.choice(41, size=rng.integers(1, 25), replace=False)
+        _check_overlapping_locks(ra.tolist(), rb.tolist())
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_lock_id_recycling_never_resurrects_stale_slots(seed):
+        rng = np.random.default_rng(100 + seed)
+        leak = rng.choice(31, size=rng.integers(1, 17), replace=False)
+        _check_recycling(leak.tolist(), int(rng.integers(1, 5)))
+
+
+# ---------------------------------------------------------------------------
+# Rearm gating: the multi-lock regression
+# ---------------------------------------------------------------------------
+
+
+def test_drain_on_lock_a_does_not_block_rearm_of_lock_b():
+    """Regression for the scalar-table behavior where ANY in-flight drain
+    gated every handle's rearm: with per-lock vectors, B revokes and
+    re-arms to completion while A's drain is still spinning on a held
+    lease."""
+    reg = BravoRegistry(slots=SLOTS)
+    a, b = reg.alloc("A"), reg.alloc("B")
+    held = jnp.asarray(pick_readers([a.lock_id], 2), jnp.int32)
+    ga = a.acquire(held)
+    assert np.asarray(ga).all()
+
+    done = threading.Event()
+    errs = []
+
+    def drain_a():
+        try:
+            a.revoke(max_wait_s=30.0)         # blocks until we release
+        except Exception as e:                # pragma: no cover
+            errs.append(e)
+        finally:
+            done.set()
+
+    t = threading.Thread(target=drain_a, daemon=True)
+    t.start()
+    deadline = time.monotonic() + 10.0
+    while not reg._revoking[a.idx]:           # wait: drain actually in flight
+        assert time.monotonic() < deadline
+        time.sleep(0.001)
+
+    # B's full writer cycle completes under A's live drain
+    scans_b = b.revoke()
+    assert scans_b >= 1
+    reg.inhibit_until_ns[b.idx] = 0
+    assert b.rearm() is True, "drain on A must not gate rearm of B"
+    assert reg._revoking[a.idx] >= 1, "A must still be draining"
+    assert not reg._armed[a.idx]
+    # ... and A itself stays gated while ITS drain is in flight
+    reg.inhibit_until_ns[a.idx] = 0
+    assert a.rearm() is False
+
+    a.release(held, granted=ga)               # let A's drain finish
+    assert done.wait(30.0) and not errs, errs
+    reg.inhibit_until_ns[a.idx] = 0
+    assert a.rearm() is True
+
+
+def test_two_concurrent_drains_complete_independently():
+    """Two writers drain two locks at once over the one table; both
+    terminate and only their own lock's bias/inhibit state is touched."""
+    reg = BravoRegistry(slots=SLOTS)
+    a, b, c = reg.alloc("A"), reg.alloc("B"), reg.alloc("C")
+    gc_ = c.acquire(jnp.asarray(pick_readers([c.lock_id], 2), jnp.int32))
+    assert np.asarray(gc_).all()
+    results = {}
+
+    def rev(name, h):
+        results[name] = h.revoke()
+
+    ts = [threading.Thread(target=rev, args=("a", a)),
+          threading.Thread(target=rev, args=("b", b))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=30.0)
+    assert results["a"] >= 1 and results["b"] >= 1
+    # the bystander lock C never lost its bias or leases
+    assert reg._armed[c.idx] and c.held() == 2
+    assert reg.revocations[a.idx] == 1 and reg.revocations[b.idx] == 1
+    assert reg.revocations[c.idx] == 0
+
+
+def test_adaptive_inhibit_policy_is_shared_host_device():
+    """Host BRAVO and the registry arm from the same adaptive_inhibit:
+    identical (ewma, window) trajectories for identical latencies."""
+    from repro.core.bravo import adaptive_inhibit
+
+    ewma_h = ewma_d = 0
+    for d in (1000, 5000, 2000, 40000):
+        ewma_h, win_h = adaptive_inhibit(ewma_h, d, 9)
+        ewma_d, win_d = adaptive_inhibit(ewma_d, d, 9)
+        assert (ewma_h, win_h) == (ewma_d, win_d)
+        assert win_h >= d * 9          # never below the paper's N*d bound
+
+
+def test_free_during_inflight_drain_waits_then_recycles_cleanly():
+    """free() must not recycle a lane whose drain is in flight: the drain's
+    bookkeeping (the _revoking decrement, the inhibit stamp) would land on
+    the lane's next tenant and brick its rearm forever."""
+    reg = BravoRegistry(slots=SLOTS)
+    a = reg.alloc("A")
+    held = jnp.asarray(pick_readers([a.lock_id], 2), jnp.int32)
+    ga = a.acquire(held)
+    assert np.asarray(ga).all()
+
+    t = threading.Thread(target=lambda: a.revoke(max_wait_s=30.0),
+                         daemon=True)
+    t.start()
+    deadline = time.monotonic() + 10.0
+    while not reg._revoking[a.idx]:
+        assert time.monotonic() < deadline
+        time.sleep(0.001)
+    # freeing mid-drain refuses (bounded wait) ...
+    with pytest.raises(RuntimeError, match="drain still in flight"):
+        reg.free(a, wait_s=0.05)
+    assert not a.closed
+    a.release(held, granted=ga)            # drain finishes
+    t.join(30.0)
+    reg.free(a)                            # ... and now succeeds
+    b = reg.alloc("B")
+    assert b.idx == a.idx
+    assert reg._revoking[b.idx] == 0, "drain gate must be clean on reuse"
+    reg.inhibit_until_ns[b.idx] = 0
+    assert b.rearm()
+    # held was collision-free under A's value; under B's fresh value a
+    # collision is possible, so only demand the fast path is live again
+    g = b.acquire(held)
+    assert np.asarray(g).any()
+
+
+def test_stale_handle_after_free_is_rejected():
+    """A handle used after free() must raise, not silently publish its
+    DEAD lock value under the recycled lane's new bias (those slots would
+    be undrainable by any live revoke) or blind-clear the new tenant's
+    slots on release."""
+    reg = BravoRegistry(slots=SLOTS)
+    h1 = reg.alloc("old")
+    rids = jnp.asarray(pick_readers([h1.lock_id], 2), jnp.int32)
+    h1.free()
+    h2 = reg.alloc("new")                 # recycles (and re-arms) the lane
+    assert h2.idx == h1.idx
+    for op in (lambda: h1.acquire(rids),
+               lambda: h1.release(rids),
+               lambda: h1.revoke(),
+               lambda: h1.rearm()):
+        with pytest.raises(RuntimeError, match="after free"):
+            op()
+    assert not np.asarray(reg.table).any(), "stale op must not touch table"
+    g = h2.acquire(rids)                  # the new tenant is unaffected
+    assert np.asarray(g).any()
+
+
+def test_registry_exhaustion_and_refill():
+    reg = BravoRegistry(slots=SLOTS, max_locks=4)
+    hs = [reg.alloc() for _ in range(4)]
+    with pytest.raises(RuntimeError):
+        reg.alloc()
+    hs[2].free()
+    h = reg.alloc()
+    assert h.idx == hs[2].idx
+    assert reg.stats()["live_locks"] == 4
