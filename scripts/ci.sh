@@ -26,3 +26,9 @@ python -m benchmarks.device_bravo --smoke
 # writer, vs ~100% with the scalar rbias), zero-transfer + aliasing
 # guarantees, and the device KV pool
 python -m benchmarks.registry --smoke
+
+# continuous-batching scheduler smoke: the paged-attention kernel vs
+# kernels/ref.py (bit-exact), the paged-vs-dense decode equivalence gate
+# (scheduler-driven engine == dense-cache loop, token for token), the
+# zero-transfer lease fast path, and a 2D-mesh scheduler run
+python -m benchmarks.scheduler --smoke

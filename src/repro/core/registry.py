@@ -70,7 +70,8 @@ from .device_bravo import (TABLE_SLOTS, _drain, _lock_limbs,
                            _release_ids32_all_impl, _release_ids32_impl)
 from .table import next_lock_id
 
-__all__ = ["BravoRegistry", "RegistryHandle", "MAX_LOCKS"]
+__all__ = ["BravoRegistry", "RegistryHandle", "MAX_LOCKS",
+           "make_sharded_revoke"]
 
 MAX_LOCKS = 128   # one VPU lane row of bias lanes per registry
 
@@ -380,6 +381,58 @@ class BravoRegistry:
                     "revocations": int(self.revocations.sum()),
                     "armed": int(self._armed.sum()),
                     "rbias_armed": int(jnp.sum(self.rbias))}
+
+
+# ---------------------------------------------------------------------------
+# Multi-pod revocation with the rbias vector sharded WITH the table
+# ---------------------------------------------------------------------------
+
+
+def make_sharded_revoke(mesh, axis=("pod", "data")):
+    """Distributed revocation for REGISTRY locks: the per-lock ``rbias``
+    vector is sharded over the same mesh axes as the table rows, so
+    clearing one lock's bias touches only the shard that OWNS that lane —
+    ``make_distributed_revoke`` on a registry handle otherwise replicates
+    the full (MAX_LOCKS,) vector, i.e. every revocation broadcasts it over
+    the slow DCN "pod" axis.  Match counts reduce hierarchically (psum the
+    ICI axis first, DCN last — the RMA-locks pattern), one scalar per pod
+    on the cross-pod fabric.
+
+    ``axis`` is a mesh axis name or an outermost-first tuple.  Returns
+    ``fn(table_sharded, rbias_sharded, lock) -> (rbias_sharded', count)``;
+    ``lock`` is a :class:`RegistryHandle` (or any object with ``idx`` +
+    ``lock_id``).  The lane product of the axes must divide ``MAX_LOCKS``
+    for the rbias shard to be even (128 lanes / 32-way pod x data shard =
+    4 lanes per shard on the 512-chip dry-run topology)."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..dist.sharding import hierarchical_psum, shard_map_compat
+
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    missing = [a for a in axes if a not in mesh.axis_names]
+    assert not missing, f"mesh {mesh.axis_names} lacks axes {missing}"
+
+    def body(table_shard, rbias_shard, lidx, lid):
+        lanes = rbias_shard.shape[0]
+        didx = jnp.zeros((), jnp.int32)
+        for a in axes:                  # outermost-first flattened shard id
+            didx = didx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+        local = lidx - didx * lanes     # off-shard -> out of range -> no-op
+        rb = jnp.where(jnp.arange(lanes) == local, 0, rbias_shard)
+        cnt = jnp.sum((table_shard == lid).astype(jnp.int32))
+        return rb, hierarchical_psum(cnt, axes)
+
+    fn = jax.jit(shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(axes, None), P(axes), P(), P()),
+        out_specs=(P(axes), P()), check_vma=False))
+
+    def rev(table_sharded, rbias_sharded, lock):
+        return fn(table_sharded, rbias_sharded,
+                  jnp.asarray(lock.idx, jnp.int32),
+                  jnp.asarray(lock.lock_id, jnp.int32))
+
+    return rev
 
 
 class RegistryHandle:

@@ -10,13 +10,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .paged_attn import _paged_attn_call
 from .table_publish import (_fused_publish_call, _fused_publish_multi_call,
                             _publish_call)
 from .table_scan import LANES, _multi_poll_call, _poll_call, _scan_call
 
 __all__ = ["as_table2d", "revocation_scan", "revocation_poll",
            "revocation_poll_multi", "publish", "clear", "fused_publish",
-           "fused_publish_multi", "fused_clear", "jit_donating", "LANES"]
+           "fused_publish_multi", "fused_clear", "paged_attention",
+           "jit_donating", "LANES"]
 
 
 def _interpret() -> bool:
@@ -97,6 +99,19 @@ def fused_publish_multi(table2d: jax.Array, rbias_vec: jax.Array,
     consumed (aliased); callers must use the returned array."""
     return _fused_publish_multi_call(table2d, rbias_vec, slots, lock_idx,
                                      ids, interpret=_interpret())
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_idx: jax.Array, cache_len: jax.Array) -> jax.Array:
+    """Gather-by-page decode attention over the KV pool's page store.
+
+    q: (B, H, hd); k/v_pages: (n_pages, page_size, KVH, hd); page_idx:
+    (B, P) int32 page-index vectors (-1 = unused lane); cache_len: (B,)
+    valid lengths.  -> (B, H, hd).  Each request's pages stream through
+    VMEM via scalar-prefetched block indices — the dense (B, S, KVH, hd)
+    cache is never materialized."""
+    return _paged_attn_call(q, k_pages, v_pages, page_idx, cache_len,
+                            interpret=_interpret())
 
 
 def revocation_poll(table2d: jax.Array, lock_id) -> jax.Array:

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: gather-by-page decode attention over the KV pool.
+
+The serving engine's paged-KV pool (PR 3) made the page *map* device
+resident, but decode still consumed densely materialized ``(B, S, KVH, hd)``
+caches — every request's pages had to be gathered into a contiguous buffer
+before attention could run.  This kernel reads the page *contents* in place:
+each request walks its page-index vector and streams the pages it owns
+through VMEM, one ``(page_size, KVH, hd)`` tile per grid step, with an
+online-softmax accumulator carried across pages in scratch.
+
+Layout and grid
+---------------
+* ``k_pages``/``v_pages``: ``(n_pages, page_size, KVH, hd)`` — the pool's
+  page store.  A request's logical position ``t`` lives in page
+  ``page_idx[b, t // page_size]`` at offset ``t % page_size``.
+* grid = ``(B, P)`` with ``P = page_idx.shape[1]``: TPU grid steps run
+  sequentially on a core, so the per-request softmax state (m/l/acc scratch)
+  accumulates across the ``P`` inner steps and the output is emitted at the
+  last page.
+* ``page_idx`` and ``cache_len`` ride in as **scalar-prefetch** operands
+  (``PrefetchScalarGridSpec``): the index map reads ``page_idx[b, p]`` to
+  pick which page tile the next grid step DMAs — the gather happens in the
+  block-fetch pipeline, not as a materialized ``take``.  Unused lanes
+  (``page_idx < 0``) clamp to page 0 and are masked out of the softmax.
+
+The pure-jnp oracle (:func:`~repro.kernels.ref.paged_attn_ref`) mirrors the
+page-walk order op for op so the CI smoke gate can require bit equality in
+interpret mode, not just allclose.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _paged_attn_kernel(pi_ref, cl_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    n_p = pl.num_programs(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ps, kvh, hd = k_ref.shape[1], k_ref.shape[2], k_ref.shape[3]
+    h = q_ref.shape[1]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+
+    page = pi_ref[b, p]
+    clen = cl_ref[b]
+    # positions this page covers; invalid lanes (past the request's length,
+    # or an unallocated -1 page clamped to 0 by the index map) are masked
+    pos = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    valid = (pos < clen) & (page >= 0)                    # (1, ps)
+
+    q = q_ref[0].astype(jnp.float32)                      # (H, hd)
+    k = k_ref[0].astype(jnp.float32)                      # (ps, KVH, hd)
+    v = v_ref[0].astype(jnp.float32)
+    qh = q.reshape(kvh, g, hd)                            # heads grouped by
+    s = jnp.einsum("kgd,skd->kgs", qh, k,                 # their kv head
+                   preferred_element_type=jnp.float32) * scale
+    s = s.reshape(h, ps)
+    s = jnp.where(valid, s, -jnp.inf)
+
+    m_prev = m_ref[...]                                   # (H, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    pexp = jnp.where(valid, jnp.exp(s - m_safe), 0.0)     # (H, ps)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(pexp, axis=1, keepdims=True)
+    pv = jnp.einsum("kgs,skd->kgd", pexp.reshape(kvh, g, ps), v,
+                    preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv.reshape(h, hd)
+    m_ref[...] = m_new
+
+    @pl.when(p == n_p - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-20)                # fully-masked rows
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)  # (inactive slots)
+        #                                                    emit zeros
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_attn_call(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     page_idx: jax.Array, cache_len: jax.Array,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k/v_pages: (n_pages, ps, KVH, hd); page_idx: (B, P)
+    int32 (-1 = unused lane); cache_len: (B,) valid lengths.  -> (B, H, hd).
+    """
+    b, h, hd = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    n_p = page_idx.shape[1]
+    assert h % kvh == 0, (h, kvh)
+
+    def kv_map(bi, pi, idx_ref, cl_ref):
+        return (jnp.maximum(idx_ref[bi, pi], 0), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # page_idx, cache_len
+        grid=(b, n_p),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda bi, pi, idx, cl: (bi, 0, 0)),
+            pl.BlockSpec((1, ps, kvh, hd), kv_map),
+            pl.BlockSpec((1, ps, kvh, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda bi, pi, idx, cl: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),    # running max
+            pltpu.VMEM((h, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((h, hd), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        _paged_attn_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=interpret,
+    )(page_idx.astype(jnp.int32), cache_len.astype(jnp.int32),
+      q, k_pages, v_pages)

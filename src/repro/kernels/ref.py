@@ -1,7 +1,9 @@
-"""Pure-jnp oracles for the table kernels (used by the allclose test sweeps
-and as the CPU fallback path)."""
+"""Pure-jnp oracles for the table and paged-attention kernels (used by the
+allclose test sweeps and as the CPU fallback path)."""
 
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -73,3 +75,48 @@ def multi_count_ref(table2d: jax.Array, lock_ids: jax.Array) -> jax.Array:
     return jnp.sum((table2d.reshape(-1)[:, None]
                     == lock_ids[None, :].astype(table2d.dtype))
                    .astype(jnp.int32), axis=0)
+
+
+def paged_attn_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                   page_idx: jax.Array, cache_len: jax.Array) -> jax.Array:
+    """Oracle for the gather-by-page decode attention kernel.
+
+    Walks the page-index vector in the SAME order as the kernel's grid
+    (online softmax, one page per step, identical per-request einsums) so
+    interpret-mode runs can be compared bit for bit, not just allclose —
+    run the oracle under ``jax.jit`` for the comparison, so both sides get
+    the same XLA fusion (FMA contraction) of the accumulator update.
+    q: (B, H, hd); k/v_pages: (n_pages, ps, KVH, hd); page_idx: (B, P)
+    int32 (-1 = unused); cache_len: (B,).  -> (B, H, hd).
+    """
+    b, h, hd = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    n_p = page_idx.shape[1]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    outs = []
+    for bi in range(b):       # per request, exactly one grid row's ops
+        qh = q[bi].astype(jnp.float32).reshape(kvh, g, hd)
+        m = jnp.full((h, 1), -jnp.inf, jnp.float32)
+        den = jnp.zeros((h, 1), jnp.float32)
+        acc = jnp.zeros((h, hd), jnp.float32)
+        for p in range(n_p):
+            page = page_idx[bi, p]
+            k = k_pages[jnp.clip(page, 0)].astype(jnp.float32)
+            v = v_pages[jnp.clip(page, 0)].astype(jnp.float32)
+            pos = p * ps + jnp.arange(ps)[None, :]
+            valid = (pos < cache_len[bi]) & (page >= 0)        # (1, ps)
+            s = jnp.einsum("kgd,skd->kgs", qh, k,
+                           preferred_element_type=jnp.float32) * scale
+            s = jnp.where(valid, s.reshape(h, ps), -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            pexp = jnp.where(valid, jnp.exp(s - m_safe), 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            den = den * corr + jnp.sum(pexp, axis=1, keepdims=True)
+            pv = jnp.einsum("kgs,skd->kgd", pexp.reshape(kvh, g, ps), v,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr + pv.reshape(h, hd)
+            m = m_new
+        outs.append(acc / jnp.maximum(den, 1e-20))
+    return jnp.stack(outs).astype(q.dtype)

@@ -133,8 +133,13 @@ def _scan_stack(body, params_stacked, x, cache=None, length=None):
 
 def dense_stack(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
                 mesh, rules: MeshRules, caches=None, cache_len=None,
-                remat_policy=None, make_caches=True):
-    """Dense / audio / vlm transformer stack (scan over L layers)."""
+                remat_policy=None, make_caches=True, pages=None,
+                new_lens=None):
+    """Dense / audio / vlm transformer stack (scan over L layers).
+
+    ``pages``/``new_lens`` (paged serving): caches are the pool's page
+    store with a leading layer dim, scanned like dense caches; the (B, P)
+    page-index matrix is closed over (shared by every layer)."""
     aux_total = jnp.zeros((), jnp.float32)
 
     def body(x, lp, lc):
@@ -147,7 +152,8 @@ def dense_stack(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
                 data_axes=rules.batch_axes(mesh), is_moe=False,
                 cache=lc, cache_len=cache_len,
                 attn_seqshard=(rules.attn_impl == "seqshard"),
-                keep_seq_sharded=rules.residual_seq)
+                keep_seq_sharded=rules.residual_seq,
+                pages=pages, new_lens=new_lens)
         if remat_policy is not None and lc is None:
             blk = jax.checkpoint(blk, policy=remat_policy)
         y, _, nc = blk(x)
@@ -167,7 +173,7 @@ def dense_stack(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
 
 def moe_stack(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
               mesh, rules: MeshRules, caches=None, cache_len=None,
-              remat_policy=None, make_caches=True):
+              remat_policy=None, make_caches=True, **_):
     """MoE stack: scan over periods of ``moe_every`` layers; the last layer
     of each period is MoE, the first k-1 are dense."""
     k = cfg.moe_every
@@ -306,8 +312,18 @@ _STACKS = {"dense": dense_stack, "audio": dense_stack, "vlm": dense_stack,
 def forward(p: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
             mesh: Mesh, rules: MeshRules, remat_policy=None,
             caches=None, cache_len=None, make_caches=True,
+            pages=None, new_lens=None,
             ) -> Tuple[jax.Array, jax.Array, Any]:
-    """Full forward pass -> (logits, aux_loss, caches)."""
+    """Full forward pass -> (logits, aux_loss, caches).
+
+    ``pages`` switches attention to the paged-KV data plane: ``caches`` is
+    the pool's page store (``serving.kv_pool`` page indices, see
+    :func:`init_paged_caches`) and positions are derived per request from
+    ``cache_len`` — position of column ``j`` is ``cache_len - S + j``
+    (right-aligned chunks; ``new_lens`` marks each row's valid tail)."""
+    if pages is not None and cfg.family not in ("dense", "vlm"):
+        raise ValueError(f"paged decode supports dense attention caches "
+                         f"only (family={cfg.family})")
     x = embed_inputs(p, cfg, batch, rules, mesh)
     S = x.shape[1]
     if cache_len is None:
@@ -315,13 +331,17 @@ def forward(p: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
     elif cache_len.ndim == 0:
         positions = (cache_len - 1).reshape(1, 1)
     else:
-        positions = (cache_len[:, None] - 1)
+        # per-request positions for the S right-aligned columns; padded
+        # columns clamp to 0 (their K/V and outputs are masked anyway)
+        positions = jnp.maximum(
+            cache_len[:, None] - S + jnp.arange(S)[None, :], 0)
     stack = _STACKS[cfg.family]
     x, aux, new_caches = stack(p, x, cfg, positions=positions, mesh=mesh,
                                rules=rules, caches=caches,
                                cache_len=cache_len,
                                remat_policy=remat_policy,
-                               make_caches=make_caches)
+                               make_caches=make_caches,
+                               pages=pages, new_lens=new_lens)
     logits = lm_logits(p, cfg, x, rules, mesh)
     return logits, aux, new_caches
 
@@ -392,3 +412,18 @@ def init_caches(cfg: ModelConfig, batch_size: int, max_seq: int,
             "attn": kv(n),
         }
     raise ValueError(f"{cfg.family} has no decode cache")
+
+
+def init_paged_caches(cfg: ModelConfig, n_pages: int, page_size: int,
+                      dtype=jnp.bfloat16) -> Any:
+    """Zero-initialized page STORE for the paged decode path: one pool of
+    ``n_pages`` KV pages shared by every request, with a leading layer dim
+    scanned like the dense caches.  The (request -> pages) map lives in
+    ``serving.kv_pool.KVPool``; requests address the store through their
+    (B, P) page-index vectors."""
+    if cfg.family not in ("dense", "vlm"):
+        raise ValueError(f"paged caches need dense attention "
+                         f"(family={cfg.family})")
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    shape = (cfg.n_layers, n_pages, page_size, kvh, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -17,6 +17,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from ..dist.sharding import axis_size, shard_map_compat
+from ..kernels import ops as K
 from .common import (ModelConfig, Params, act_fn, apply_rope, decode_attention,
                      dense_init, flash_attention, flash_attention_kvscan,
                      rms_norm, split_keys)
@@ -78,15 +79,85 @@ def init_moe(key, cfg: ModelConfig, n: int) -> Params:
 # ---------------------------------------------------------------------------
 
 
+def _paged_attention_sharded(q, k_pages, v_pages, pages, cache_len,
+                             mesh, data_axes):
+    """Decode attention over the page store, wired for multi-host meshes:
+    when the data axes are live and divide the batch, requests shard over
+    them via ``shard_map_compat`` (never raw ``jax.shard_map`` — the pinned
+    jax predates it) and each shard streams only ITS requests' pages
+    through the kernel; the page store replicates (it is the pool)."""
+    b = q.shape[0]
+    if mesh is not None and not getattr(mesh, "empty", False):
+        bax = tuple(a for a in data_axes if a in mesh.axis_names)
+        nb = 1
+        for a in bax:
+            nb *= mesh.shape[a]
+        if nb > 1 and b % nb == 0:
+            def body(q_, pg_, cl_, kp_, vp_):
+                return K.paged_attention(q_, kp_, vp_, pg_, cl_)
+
+            return shard_map_compat(
+                body, mesh=mesh,
+                in_specs=(P(bax), P(bax), P(bax), P(), P()),
+                out_specs=P(bax), check_vma=False)(
+                    q, pages, cache_len, k_pages, v_pages)
+    return K.paged_attention(q, k_pages, v_pages, pages, cache_len)
+
+
+def _paged_chunk_attention(q, k_pages, v_pages, pages, cache_len,
+                           q_pos, valid_q):
+    """Chunked-prefill attention: the chunk's queries (q: (B, S, H, hd) at
+    absolute positions ``q_pos``) attend causally to every valid position
+    in their request's pages.  The pages are gathered dense here — prefill
+    is compute-bound and runs off the decode hot path; only the S == 1
+    decode step uses the streaming gather-by-page kernel."""
+    b, s, h, hd = q.shape
+    n_pages, ps, kvh, _ = k_pages.shape
+    n_lanes = pages.shape[1]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    safe = jnp.clip(pages, 0)
+    kd = k_pages[safe].reshape(b, n_lanes * ps, kvh, hd).astype(jnp.float32)
+    vd = v_pages[safe].reshape(b, n_lanes * ps, kvh, hd).astype(jnp.float32)
+    t = jnp.arange(n_lanes * ps)
+    valid_t = (t[None, :] < cache_len[:, None]) \
+        & jnp.repeat(pages >= 0, ps, axis=1)                     # (B, T)
+    qh = q.astype(jnp.float32).reshape(b, s, kvh, g, hd)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qh, kd,
+                    preferred_element_type=jnp.float32) * scale
+    mask = valid_t[:, None, None, None, :] \
+        & (t[None, None, None, None, :] <= q_pos[:, None, None, :, None]) \
+        & valid_q[:, None, None, :, None]
+    sc = jnp.where(mask, sc, -jnp.inf)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)     # fully-masked (padded) rows
+    pexp = jnp.where(mask, jnp.exp(sc - m), 0.0)
+    den = jnp.maximum(jnp.sum(pexp, axis=-1, keepdims=True), 1e-20)
+    o = jnp.einsum("bkgst,btkd->bskgd", pexp / den, vd,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, s, h, hd).astype(q.dtype)
+
+
 def attn_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
                  positions: jax.Array,
                  cache: Optional[Dict[str, jax.Array]] = None,
                  cache_len: Optional[jax.Array] = None,
                  mesh=None, data_axes: Tuple[str, ...] = (),
                  seqshard: bool = False, keep_seq_sharded: bool = False,
+                 pages: Optional[jax.Array] = None,
+                 new_lens: Optional[jax.Array] = None,
                  ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """x: (B, S, d).  If ``cache`` is given (decode), S == 1 and the new K/V
-    are written at position ``cache_len``; returns the updated cache."""
+    are written at position ``cache_len``; returns the updated cache.
+
+    Paged mode (``pages`` given): ``cache`` is the KV pool's page store
+    ``{"k"/"v": (n_pages, page_size, KVH, hd)}`` shared by every request;
+    ``pages`` is each request's (B, P) page-index vector and position ``t``
+    lives at ``pages[b, t // page_size]`` offset ``t % page_size``.  The
+    chunk's K/V are scattered into the pages in place and attention reads
+    by page index — S == 1 through the streaming Pallas kernel, S > 1
+    (chunked prefill, right-aligned with ``new_lens`` valid trailing
+    tokens per row) through the gather-dense chunk path."""
     B, S, d = x.shape
     h = rms_norm(x, p["ln"], cfg.norm_eps)
     q = (h @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
@@ -96,7 +167,32 @@ def attn_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
 
-    if cache is None:
+    if pages is not None:
+        # paged data plane: scatter the chunk's K/V into the shared page
+        # store, then attend by page index — the dense (B, S, KVH, hd)
+        # cache never materializes on the decode path
+        n_pages, ps = cache["k"].shape[0], cache["k"].shape[1]
+        n_lanes = pages.shape[1]
+        t_new = cache_len[:, None] - S + jnp.arange(S)[None, :]     # (B, S)
+        valid_new = t_new >= 0
+        if new_lens is not None:    # right-aligned chunk: leading pad cols
+            valid_new &= jnp.arange(S)[None, :] >= S - new_lens[:, None]
+        col = jnp.clip(t_new, 0, n_lanes * ps - 1)
+        page = jnp.take_along_axis(pages, col // ps, axis=1)        # (B, S)
+        page = jnp.where(valid_new & (page >= 0), page, n_pages)    # -> drop
+        off = col % ps
+        kc = cache["k"].at[page, off].set(k.astype(cache["k"].dtype),
+                                          mode="drop")
+        vc = cache["v"].at[page, off].set(v.astype(cache["v"].dtype),
+                                          mode="drop")
+        if S == 1 and new_lens is None:
+            o = _paged_attention_sharded(q[:, 0], kc, vc, pages, cache_len,
+                                         mesh, data_axes)[:, None]
+        else:
+            o = _paged_chunk_attention(q, kc, vc, pages, cache_len,
+                                       t_new, valid_new)
+        new_cache = {"k": kc, "v": vc}
+    elif cache is None:
         if seqshard and mesh is not None:
             # heads %% TP != 0: shard the q sequence over "model" instead of
             # heads; K/V (small under GQA) replicate (DESIGN.md §5)
@@ -361,12 +457,14 @@ def block_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
                   moe_decode_tp: bool = False,
                   moe_weight_resident: bool = False,
                   attn_seqshard: bool = False,
-                  keep_seq_sharded: bool = False):
+                  keep_seq_sharded: bool = False,
+                  pages=None, new_lens=None):
     a, new_cache = attn_forward(p["attn"], x, cfg, positions=positions,
                                 cache=cache, cache_len=cache_len,
                                 mesh=mesh, data_axes=tuple(data_axes or ()),
                                 seqshard=attn_seqshard,
-                                keep_seq_sharded=keep_seq_sharded)
+                                keep_seq_sharded=keep_seq_sharded,
+                                pages=pages, new_lens=new_lens)
     x = x + a
     if is_moe:
         m, aux = moe_forward(p["moe"], x, cfg, mesh, data_axes,

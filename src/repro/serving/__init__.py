@@ -1,4 +1,8 @@
 from .kv_pool import KVPool
-from .steps import make_decode_step, make_prefill_step
+from .scheduler import Phase, Scheduler, SchedulerConfig, SlotState
+from .steps import (make_decode_step, make_paged_prefill_step,
+                    make_prefill_step)
 
-__all__ = ["KVPool", "make_decode_step", "make_prefill_step"]
+__all__ = ["KVPool", "Phase", "Scheduler", "SchedulerConfig", "SlotState",
+           "make_decode_step", "make_paged_prefill_step",
+           "make_prefill_step"]

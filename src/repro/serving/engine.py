@@ -1,19 +1,24 @@
-"""Continuous-batching serving engine with BRAVO-protected shared state.
+"""Serving engine: mechanisms (threads + locks) under a scheduler (policy).
 
 This is where the paper's technique is a first-class feature of the
-framework.  The engine's host-side control plane is multi-threaded:
+framework, and since PR 4 the control plane is split in two:
 
-* N handler threads run decode steps for their assigned request slots.
-  Each step takes **read** permission on the model-epoch lock (the weights
-  must not be swapped mid-step) — an extremely read-dominated pattern
-  (thousands of acquisitions/s across threads).
-* A weight-updater thread occasionally hot-swaps the model (write lock) —
-  e.g. an RL learner pushing fresh weights.
-* A page-manager thread compacts/evicts KV pages (write lock on the page
-  table); handlers take read locks on it every step.
+* **The engine owns the mechanisms**: worker threads, the BRAVO host locks,
+  the device registry lease batches, the jitted prefill/decode programs,
+  and the device-resident batch state (page-index matrix, cache lengths,
+  current tokens).  Every step takes **read** permission on the model-epoch
+  lock and the KV page-map stripes — an extremely read-dominated pattern.
+  A weight-updater thread occasionally hot-swaps the model (write lock);
+  a page-manager thread requests compaction (write lock on the page table).
+* **The scheduler owns the policy** (``serving.scheduler``): admission
+  control (slot cap + page watermark, the concurrency-restriction idea of
+  arXiv:1905.10818), chunked prefill interleaved with decode, and
+  preemption/eviction ordered by page pressure from the
+  :class:`~repro.serving.kv_pool.KVPool`.  It holds no threads, no locks
+  and no device state, so the policy is unit-testable as a state machine.
 
 Lock implementation is selectable (``--lock ba | bravo-ba | pthread |
-bravo-pthread | percpu | cohort-rw``): with BRAVO, handler threads publish
+bravo-pthread | percpu | cohort-rw``): with BRAVO, worker threads publish
 themselves in the shared visible-readers table and never touch the central
 reader counter, which is exactly the paper's claim — and the engine's
 metrics report both throughput and the per-lock BRAVO statistics so the
@@ -24,19 +29,28 @@ routed through the *device*-side batched lease API: the engine builds ONE
 ``core.registry.BravoRegistry`` — one shared visible-readers table for the
 whole address space, the paper's economy — and every guarded resource is a
 registry lock with its own bias lane: the model-epoch lock, and the KV
-pool's striped page locks.  Each decode step publishes the whole batch's
-request ids in one fused, donation-aliased program (zero host sync), and
-the weight updater / page compactor revoke ONLY their own lock's bias
-before mutating — a weight swap no longer flaps the page locks' fast path
-(nor vice versa), which the old one-scalar-rbias-per-table design could
-not express.  The paged-KV map itself is device-resident
-(``serving.kv_pool.KVPool``): allocate/reclaim/lookup are donated device
-programs, eliminating the host-side numpy owner array and Python free
-list.
+pool's striped page locks.  Each step publishes the whole batch's request
+ids in one fused, donation-aliased program (zero host sync), and the
+weight updater / page compactor revoke ONLY their own lock's bias before
+mutating — a weight swap never flaps the KV stripes' fast path (nor vice
+versa).
+
+Paged decode data flow (scheduler mode, ``scheduler=SchedulerConfig()``):
+the KV page *contents* live in one device-resident page store
+(``models.model.init_paged_caches``) owned by the engine; the (request ->
+pages) *map* lives in the :class:`~repro.serving.kv_pool.KVPool`.  Each
+tick the engine takes the page-map stripe leases and the model-epoch lease
+for the WHOLE batch in one fused publish each, holds them across the step
+— an allocate/reclaim on an involved stripe drains until the step's reads
+are done — and the step reads pages directly through the gather-by-page
+Pallas kernel (``kernels.paged_attn``).  Steady-state decode moves zero
+bytes of lock or map traffic between host and device; only the generated
+tokens come back.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -54,7 +68,9 @@ from ..core.registry import BravoRegistry, RegistryHandle
 from ..models import model as M
 from ..models.common import ModelConfig
 from .kv_pool import KVPool
-from .steps import make_decode_step, make_prefill_step
+from .scheduler import Phase, Scheduler, SchedulerConfig, SlotState
+from .steps import (jit_step, make_decode_step, make_paged_prefill_step,
+                    make_prefill_step)
 
 # device lease handles share one protocol (acquire/release/revoke/rearm)
 Lease = Optional[Union[LeaseHandle, RegistryHandle]]
@@ -212,46 +228,83 @@ class PageTable:
             self.lock.release_read(host_tok)
 
     def allocate(self, rid: int, n: int) -> List[int]:
+        """Pool mode dispatches the donated alloc program under the write
+        lock but MATERIALIZES the page indices only after releasing it:
+        the host-device sync is off the critical section, so the writer
+        hold time (= the BRAVO revocation window every reader on this lock
+        pays for) is bounded by dispatch cost, not a device round-trip."""
         tok = self.lock.acquire_write()
         try:
             if self.pool is not None:
-                return self.pool.allocate(rid, n)
-            if self.leases is not None:
-                self.leases.revoke()
-            if len(self._free) < n:
-                return []
-            pages = [self._free.pop() for _ in range(n)]
-            self.owner[pages] = rid
-            return pages
+                take, ok = self.pool.allocate_async(rid, n)
+            else:
+                if self.leases is not None:
+                    self.leases.revoke()
+                if len(self._free) < n:
+                    return []
+                pages = [self._free.pop() for _ in range(n)]
+                self.owner[pages] = rid
+                return pages
         finally:
             self.lock.release_write(tok)
+        return self.pool.materialize_alloc(take, ok)   # sync OUTSIDE
 
     def reclaim(self, rid: int) -> int:
         tok = self.lock.acquire_write()
         try:
             if self.pool is not None:
-                return self.pool.reclaim(rid)
-            if self.leases is not None:
-                self.leases.revoke()
-            pages = list(np.where(self.owner == rid)[0])
-            self.owner[pages] = -1
-            self._free.extend(pages)
-            return len(pages)
+                cnt = self.pool.reclaim_async(rid)
+            else:
+                if self.leases is not None:
+                    self.leases.revoke()
+                pages = list(np.where(self.owner == rid)[0])
+                self.owner[pages] = -1
+                self._free.extend(pages)
+                return len(pages)
         finally:
             self.lock.release_write(tok)
+        return int(cnt)                                # sync OUTSIDE
 
-    def compact(self) -> None:
-        """Background compaction tick (host mode keeps its free list
-        sorted; the device pool's first-fit needs no defragmentation, so
-        pool mode must not pay a write acquire — on a BRAVO host lock that
-        is a bias revocation stalling every reader — to guard a no-op)."""
+    def compact(self, live=None) -> int:
+        """Background compaction tick.
+
+        Pool mode: scrub orphan pages — pages whose owner rid is not in
+        ``live`` (e.g. leaked by a request torn down mid-flight).  The
+        synchronizing part (the orphan PLAN) runs before the write lock is
+        taken, and a clean plan never takes the lock at all; under the
+        lock only the donated owner-vector swap (plus the flagged
+        stripes' bias revocation) is dispatched, and the freed count is
+        read back after release.  Holding the write lock across a device
+        sync — the bug this replaces — stretched every reader's BRAVO
+        revocation window by a full host round-trip.
+
+        Host mode keeps its free list sorted (pure host work, no sync to
+        hoist).  Returns the number of pages scrubbed."""
         if self.pool is not None:
-            return
+            if live is None:
+                return 0
+            pad = 1
+            while pad < max(len(live), 1):
+                pad *= 2                       # bounded set of jit shapes
+            live_arr = np.full((pad,), -1, np.int64)
+            live_arr[:len(live)] = list(live)
+            live_dev = jnp.asarray(live_arr, jnp.int32)
+            per_stripe, total = self.pool.orphan_plan(live_dev)  # sync, no
+            if total == 0:                                       # lock held
+                return 0
+            tok = self.lock.acquire_write()
+            try:
+                cnt = self.pool.scrub_orphans_async(live_dev,
+                                                    per_stripe > 0)
+            finally:
+                self.lock.release_write(tok)
+            return int(cnt)                    # sync OUTSIDE the lock
         tok = self.lock.acquire_write()
         try:
             self._free.sort()
         finally:
             self.lock.release_write(tok)
+        return 0
 
 
 class ServingEngine:
@@ -259,7 +312,8 @@ class ServingEngine:
                  lock_name: str = "bravo-ba", handlers: int = 4,
                  max_seq: int = 128, slots_per_handler: int = 4,
                  n_pages: int = 4096, env: Optional[LockEnv] = None,
-                 device_leases: bool = True, kv_stripes: int = 4):
+                 device_leases: bool = True, kv_stripes: int = 4,
+                 scheduler: Optional[SchedulerConfig] = None):
         self.cfg = cfg
         self.mesh = mesh
         self.rules = rules
@@ -290,6 +344,38 @@ class ServingEngine:
         self._stop = threading.Event()
         self._prefill = jax.jit(make_prefill_step(cfg, mesh, rules))
         self._decode = jax.jit(make_decode_step(cfg, mesh, rules))
+
+        # ---- scheduler mode (continuous batching over the paged pool) ----
+        self.sched_cfg = scheduler
+        self.scheduler: Optional[Scheduler] = None
+        if scheduler is not None:
+            if pool is None:
+                raise ValueError("scheduler mode needs device_leases=True "
+                                 "(the paged pool IS the data plane)")
+            sc = scheduler
+            self.scheduler = Scheduler(sc, n_pages)
+            # the page STORE (contents); the pool above holds the MAP
+            self._pages_kv = M.init_paged_caches(cfg, n_pages, sc.page_size)
+            ms, lanes = sc.max_slots, sc.lanes
+            # device-resident batch state: touched only on control-plane
+            # events (admission / growth / eviction); the decode tick
+            # reads it in place with zero host traffic
+            self._page_tbl = jnp.full((ms, lanes), -1, jnp.int32)
+            self._clen = jnp.zeros((ms,), jnp.int32)
+            self._cur = jnp.zeros((ms, 1), jnp.int32)
+            self._rids = jnp.full((ms,), -1, jnp.int32)
+            self._active = jnp.zeros((ms,), jnp.int32)
+            self._decode_paged = jit_step(
+                make_decode_step(cfg, mesh, rules, paged=True),
+                donate_argnums=(1,))
+            self._prefill_paged = jit_step(
+                make_paged_prefill_step(cfg, mesh, rules),
+                donate_argnums=(1,))
+            self._bump = jax.jit(lambda c, a: c + a)
+            self._free_est = n_pages        # host mirror of pool pressure
+            self._compact_req = False
+            self.step_ns: "collections.deque[int]" = collections.deque(
+                maxlen=4096)
 
     # ------------------------------------------------------------- handlers
     def _handler(self, hid: int) -> None:
@@ -376,6 +462,205 @@ class ServingEngine:
         with self._stats_lock:
             self.stats.tokens_out += sum(len(o) for o in outs)
 
+    # ----------------------------------------------- scheduler mode (PR 4)
+    def _submit_slot(self, r: Request) -> None:
+        self.scheduler.submit(SlotState(
+            rid=r.rid, prefix=np.asarray(r.prompt, np.int32),
+            max_new=r.max_new, request=r))
+
+    def _drain_inq(self) -> None:
+        while True:
+            try:
+                r = self.inq.get_nowait()
+            except queue.Empty:
+                return
+            if r is not None:        # None = legacy stop sentinel; the
+                self._submit_slot(r)  # loop exits via _stop instead
+
+    def _bind_pages(self, st: SlotState, pages: List[int]) -> None:
+        base = len(st.pages)
+        st.pages.extend(pages)
+        self._free_est -= len(pages)
+        self._page_tbl = self._page_tbl.at[
+            st.row, base:base + len(pages)].set(
+                jnp.asarray(pages, jnp.int32))   # one dispatch, static slice
+
+    def _clear_row(self, row: int) -> None:
+        self._page_tbl = self._page_tbl.at[row].set(-1)
+        self._clen = self._clen.at[row].set(0)
+        self._cur = self._cur.at[row].set(0)
+        self._rids = self._rids.at[row].set(-1)
+        self._active = self._active.at[row].set(0)
+
+    def _evict(self, st: SlotState) -> None:
+        """Preempt under page pressure: reclaim, requeue (the scheduler
+        folds generated tokens into the prefix), clear the row."""
+        row = st.row
+        self._free_est += self.pages.reclaim(st.rid)
+        self.scheduler.evict(st)
+        self._clear_row(row)
+
+    def _finish(self, st: SlotState) -> None:
+        row = st.row
+        self._free_est += self.pages.reclaim(st.rid)
+        self.scheduler.finish(st)
+        self._clear_row(row)
+        r = st.request
+        if r is not None:
+            r.out = np.asarray(st.out, np.int32)
+            r.done.set()
+
+    def _grow_slot(self, st: SlotState, n: int) -> bool:
+        """Allocate ``n`` pages for a running slot, evicting newest-first
+        (page-pressure preemption) until the allocation fits."""
+        while True:
+            pages = self.pages.allocate(st.rid, n)
+            if pages:
+                self._bind_pages(st, pages)
+                return True
+            victim = self.scheduler.pick_victim(exclude=st)
+            if victim is None:
+                return False
+            self._evict(victim)
+
+    def _admit(self) -> None:
+        """Admission: the scheduler applies the watermarks; the engine
+        allocates the admitted slots' pages (no eviction on admission —
+        a new request never preempts running work) and binds their rows."""
+        admitted = self.scheduler.admit(self._free_est)
+        for i, st in enumerate(admitted):
+            need = self.sched_cfg.pages_for(st.n_prefix + 1)
+            pages = self.pages.allocate(st.rid, need)
+            if not pages:
+                # the host free estimate was stale: un-admit this slot AND
+                # every later one (reversed, so the queue keeps its order)
+                # — a slot left running without pages would prefill into
+                # nothing and stream garbage
+                for back in reversed(admitted[i:]):
+                    self.scheduler.defer(back)
+                break
+            self._rids = self._rids.at[st.row].set(st.rid)
+            self._bind_pages(st, pages)
+
+    def _run_prefill(self, plan) -> None:
+        """One chunked-prefill tick: right-aligned chunks for up to
+        ``prefill_rows`` slots, under the page-stripe + model-epoch lease
+        batch (held across the step, like decode)."""
+        sc = self.sched_cfg
+        rows, width, lanes = sc.prefill_rows, sc.prefill_chunk, sc.lanes
+        toks = np.zeros((rows, width), np.int32)
+        clens = np.zeros((rows,), np.int32)
+        newls = np.zeros((rows,), np.int32)
+        ptbl = np.full((rows, lanes), -1, np.int32)
+        rids = np.full((rows,), -1, np.int32)
+        for i, (st, chunk) in enumerate(zip(plan.slots, plan.chunks)):
+            seg = st.prefix[st.prefill_pos:st.prefill_pos + chunk]
+            toks[i, width - chunk:] = seg
+            newls[i] = chunk
+            clens[i] = st.prefill_pos + chunk
+            ptbl[i, :len(st.pages)] = st.pages
+            rids[i] = st.rid
+        rid_dev = jnp.asarray(rids)
+        args = map(jnp.asarray, (toks, clens, newls, ptbl))
+        ptok, _ = self.pages.read_batch(rid_dev)
+        try:
+            rtok, params, _ = self.store.read_batch(rid_dev)
+            try:
+                nxt, self._pages_kv = self._prefill_paged(
+                    params, self._pages_kv, *args)
+            finally:
+                self.store.done_read_batch(rtok, rid_dev)
+        finally:
+            self.pages.done_read_batch(ptok)
+        nxt_h = np.asarray(nxt)
+        done: List[SlotState] = []
+        first_toks = 0
+        for i, (st, chunk) in enumerate(zip(plan.slots, plan.chunks)):
+            if self.scheduler.on_prefill(st, chunk):
+                tok = int(nxt_h[i])     # final chunk: first generated token
+                first_toks += 1
+                row = st.row
+                self._cur = self._cur.at[row, 0].set(tok)
+                self._clen = self._clen.at[row].set(st.pos + 1)
+                self._active = self._active.at[row].set(1)
+                if self.scheduler.on_token(st, tok):
+                    done.append(st)     # max_new == 1
+        for st in done:
+            self._finish(st)
+        with self._stats_lock:
+            self.stats.prefills += 1
+            self.stats.read_acquires += 1
+            self.stats.tokens_out += first_toks
+
+    def _run_decode(self, plan) -> None:
+        """One decode tick over every DECODE row: grow pages first (with
+        page-pressure eviction), then ONE fused lease batch per lock held
+        across the step, one jitted step, zero host traffic on the lease
+        fast path (only the generated tokens come back)."""
+        for st in plan.grow:
+            if st.phase is not Phase.DECODE:
+                continue                 # evicted by an earlier growth
+            if not self._grow_slot(st, 1):
+                self._evict(st)          # no other victim: requeue itself
+        slots = [st for st in plan.slots if st.phase is Phase.DECODE]
+        if not slots:
+            return
+        t0 = time.monotonic_ns()
+        rid_dev = self._rids
+        ptok, _ = self.pages.read_batch(rid_dev)
+        try:
+            rtok, params, _ = self.store.read_batch(rid_dev)
+            try:
+                nxt, _logits, self._pages_kv = self._decode_paged(
+                    params, self._pages_kv, self._cur, self._clen,
+                    self._page_tbl)
+            finally:
+                self.store.done_read_batch(rtok, rid_dev)
+        finally:
+            self.pages.done_read_batch(ptok)
+        self._cur = nxt
+        self._clen = self._bump(self._clen, self._active)
+        toks = np.asarray(nxt)[:, 0]     # the data-plane output sync
+        self.step_ns.append(time.monotonic_ns() - t0)
+        done = [st for st in slots
+                if self.scheduler.on_token(st, int(toks[st.row]))]
+        for st in done:
+            self._finish(st)
+        with self._stats_lock:
+            self.stats.decode_steps += 1
+            self.stats.read_acquires += 1
+            self.stats.tokens_out += len(slots)
+
+    def _schedule_tick(self) -> bool:
+        """One policy round: service compaction, admit, run the plan.
+        Returns False when idle (the loop then blocks on the queue)."""
+        self._drain_inq()
+        if self._compact_req:
+            self._compact_req = False
+            live = [s.rid for s in self.scheduler.running.values()]
+            self._free_est += self.pages.compact(live=live)
+            with self._stats_lock:
+                self.stats.compactions += 1
+        self._admit()
+        plan = self.scheduler.plan()
+        if plan.kind == "prefill":
+            self._run_prefill(plan)
+            return True
+        if plan.kind == "decode":
+            self._run_decode(plan)
+            return True
+        return False
+
+    def _schedule_loop(self) -> None:
+        while not self._stop.is_set():
+            if not self._schedule_tick():
+                try:
+                    r = self.inq.get(timeout=0.05)
+                except queue.Empty:
+                    continue
+                if r is not None:
+                    self._submit_slot(r)
+
     # ------------------------------------------------------- background ops
     def _updater(self, period_s: float, perturb: Callable[[Any], Any]):
         while not self._stop.wait(period_s):
@@ -386,18 +671,30 @@ class ServingEngine:
 
     def _compactor(self, period_s: float):
         while not self._stop.wait(period_s):
-            self.pages.compact()
-            with self._stats_lock:
-                self.stats.compactions += 1
+            if self.scheduler is not None:
+                # the scheduler thread is the only page allocator in this
+                # mode; hand it the request so the live-rid snapshot can
+                # never race an in-flight admission
+                self._compact_req = True
+            else:
+                self.pages.compact()
+                with self._stats_lock:
+                    self.stats.compactions += 1
 
     # --------------------------------------------------------------- public
     def start(self, *, swap_period_s: float = 0.0,
               perturb: Optional[Callable[[Any], Any]] = None,
               compact_period_s: float = 0.0) -> None:
-        for h in range(self.handlers):
-            t = threading.Thread(target=self._handler, args=(h,), daemon=True)
+        if self.scheduler is not None:
+            t = threading.Thread(target=self._schedule_loop, daemon=True)
             t.start()
             self._threads.append(t)
+        else:
+            for h in range(self.handlers):
+                t = threading.Thread(target=self._handler, args=(h,),
+                                     daemon=True)
+                t.start()
+                self._threads.append(t)
         if swap_period_s > 0:
             pf = perturb or (lambda p: jax.tree.map(
                 lambda x: x * (1.0 + 1e-6) if x.dtype.kind == "f" else x, p))
@@ -412,6 +709,12 @@ class ServingEngine:
             self._threads.append(t)
 
     def submit(self, req: Request) -> None:
+        if self.sched_cfg is not None and \
+                len(req.prompt) + req.max_new > self.sched_cfg.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new} exceeds scheduler max_seq "
+                f"{self.sched_cfg.max_seq}")
         self.inq.put(req)
 
     def stop(self) -> None:
@@ -431,4 +734,12 @@ class ServingEngine:
         if self.registry is not None:
             out["device_leases"] = self.registry.stats()
             out["kv_pool"] = self.kv_pool.stats()
+        if self.scheduler is not None:
+            out["scheduler"] = self.scheduler.stats()
+            lat = np.asarray(self.step_ns, np.float64)
+            if lat.size:
+                out["scheduler"]["decode_p50_us"] = round(
+                    float(np.percentile(lat, 50)) / 1e3, 2)
+                out["scheduler"]["decode_p99_us"] = round(
+                    float(np.percentile(lat, 99)) / 1e3, 2)
         return out

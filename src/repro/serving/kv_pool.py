@@ -22,8 +22,18 @@ page map through the host.  :class:`KVPool` moves the map onto the device:
   and hash limbs are all gathered in-graph (``acquire_by_index``), so a
   steady-state decode step moves zero bytes between host and device.
 
+The pool holds the page *map*; the page *contents* (the KV tensors) live
+in the engine's page store (``models.model.init_paged_caches``) and are
+read by page index through the ``kernels.paged_attn`` gather kernel —
+the scheduler's decode data plane never materializes a dense cache.
+
 Writers must hold external write exclusion (the engine's host rwlock) —
 the pool revokes/drains device leases, it does not arbitrate host threads.
+Every writer splits into a dispatch half (``*_async``, safe under that
+lock: it enqueues donated programs without synchronizing) and a
+materialize half the caller runs AFTER dropping the lock, so the writer
+hold time — the BRAVO revocation window — never includes a host-device
+round-trip.
 """
 
 from __future__ import annotations
@@ -52,7 +62,8 @@ def _alloc_impl(owner, rid, n):
     """``n`` is a TRACED scalar: request sizes vary per prompt, and a
     static n would recompile this program for every distinct page count on
     the serving path.  The taken-pages result is a mask (static shape); the
-    caller derives indices host-side — allocate synchronizes anyway."""
+    caller derives indices host-side — AFTER dropping any write lock it
+    holds (see :meth:`KVPool.allocate_async`)."""
     free = owner < 0
     rank = jnp.cumsum(free.astype(jnp.int32))       # 1-based among free
     enough = rank[-1] >= n
@@ -82,6 +93,26 @@ def _stripe_lanes_impl(stripe_idx, rids, *, stripes: int):
     return stripe_idx[rids % stripes]
 
 
+def _orphan_plan_impl(owner, live, *, stripes: int):
+    """Per-stripe orphan-page counts + total: pages whose owner rid is
+    neither free nor in ``live`` (a -1-padded vector of live rids)."""
+    is_live = jnp.any(owner[:, None] == live[None, :], axis=1) | (owner < 0)
+    orphan = ~is_live
+    stripe_of = jnp.where(owner >= 0, owner % stripes, 0)
+    per = jnp.sum(orphan[:, None]
+                  & (stripe_of[:, None] == jnp.arange(stripes)[None, :]),
+                  axis=0)
+    return per, jnp.sum(orphan.astype(jnp.int32))
+
+
+def _scrub_impl(owner, live):
+    """Free every orphan page (recheck against ``live`` IN GRAPH, so a
+    plan computed before the write lock was taken can never free a page
+    that became live in between)."""
+    is_live = jnp.any(owner[:, None] == live[None, :], axis=1) | (owner < 0)
+    return jnp.where(is_live, owner, FREE), jnp.sum(~is_live)
+
+
 class _Programs(NamedTuple):
     alloc: object
     reclaim: object
@@ -89,6 +120,8 @@ class _Programs(NamedTuple):
     mask_batch: object
     free_count: object
     stripe_lanes: object    # static stripes
+    orphan_plan: object     # static stripes
+    scrub: object
 
 
 @functools.lru_cache(maxsize=None)
@@ -102,7 +135,10 @@ def _programs() -> _Programs:
         mask_batch=jax.jit(_mask_batch_impl),
         free_count=jax.jit(_free_count_impl),
         stripe_lanes=jax.jit(_stripe_lanes_impl,
-                             static_argnames=("stripes",)))
+                             static_argnames=("stripes",)),
+        orphan_plan=jax.jit(_orphan_plan_impl,
+                            static_argnames=("stripes",)),
+        scrub=jit_donating(_scrub_impl, 1))
 
 
 class KVPool:
@@ -184,10 +220,15 @@ class KVPool:
         return mask
 
     # -------------------------------------------------------------- writers
-    def allocate(self, rid: int, n: int, **revoke_kw) -> List[int]:
-        """First-fit allocate ``n`` pages to ``rid`` (all-or-nothing; []
-        when the pool is short).  Revokes ONLY this rid's stripe bias —
-        reads on other stripes keep their fast path throughout."""
+    def allocate_async(self, rid: int, n: int, **revoke_kw):
+        """Dispatch-only first-fit allocate: revoke the rid's stripe bias,
+        drain its readers, and enqueue the donated owner-vector update —
+        WITHOUT synchronizing on the result.  Returns device ``(take
+        mask, enough)``; pass to :meth:`materialize_alloc` for the page
+        indices.  Callers holding a host write lock (``PageTable``) drop
+        it between the two calls, so the host-device sync never extends
+        the writer's critical section — which is exactly the BRAVO
+        revocation window every other reader pays for."""
         self._stripe(rid).revoke(**revoke_kw)
         with self._mu:
             owner, take, ok = _programs().alloc(
@@ -195,18 +236,62 @@ class KVPool:
                 jnp.asarray(n, jnp.int32))
             self.owner = owner
             self.allocates += 1
+        return take, ok
+
+    @staticmethod
+    def materialize_alloc(take, ok) -> List[int]:
+        """Synchronizing half of :meth:`allocate_async` (all-or-nothing;
+        [] when the pool was short)."""
         if not bool(ok):
             return []
         return np.where(np.asarray(take))[0].tolist()
 
-    def reclaim(self, rid: int, **revoke_kw) -> int:
+    def allocate(self, rid: int, n: int, **revoke_kw) -> List[int]:
+        """First-fit allocate ``n`` pages to ``rid`` (all-or-nothing; []
+        when the pool is short).  Revokes ONLY this rid's stripe bias —
+        reads on other stripes keep their fast path throughout."""
+        return self.materialize_alloc(*self.allocate_async(rid, n,
+                                                           **revoke_kw))
+
+    def reclaim_async(self, rid: int, **revoke_kw) -> jax.Array:
+        """Dispatch-only reclaim; returns the device count (``int()`` it
+        after dropping any write lock)."""
         self._stripe(rid).revoke(**revoke_kw)
         with self._mu:
             owner, cnt = _programs().reclaim(self.owner,
                                              jnp.asarray(rid, jnp.int32))
             self.owner = owner
             self.reclaims += 1
-        return int(cnt)
+        return cnt
+
+    def reclaim(self, rid: int, **revoke_kw) -> int:
+        return int(self.reclaim_async(rid, **revoke_kw))
+
+    # ---------------------------------------------------------- compaction
+    def orphan_plan(self, live: jax.Array):
+        """Count orphan pages (owner not in the -1-padded ``live`` rid
+        vector): -> (per-stripe counts np, total int).  SYNCHRONIZES —
+        call it before taking any write lock; the scrub recheck runs in
+        graph, so a stale plan only ever skips or over-revokes stripes,
+        never frees a live page."""
+        with self._mu:
+            per, total = _programs().orphan_plan(self.owner, live,
+                                                 stripes=self.stripes)
+        return np.asarray(per), int(total)
+
+    def scrub_orphans_async(self, live: jax.Array,
+                            stripe_mask=None, **revoke_kw) -> jax.Array:
+        """Dispatch-only orphan scrub: revoke (and drain) only the stripes
+        the plan flagged, then enqueue the donated owner update.  Returns
+        the device count of pages freed."""
+        for s, h in enumerate(self.locks):
+            if stripe_mask is None or stripe_mask[s]:
+                h.revoke(**revoke_kw)
+        with self._mu:
+            owner, cnt = _programs().scrub(self.owner, live)
+            self.owner = owner
+            self.reclaims += 1
+        return cnt
 
     # ---------------------------------------------------------------- misc
     def free_pages(self) -> List[int]:

@@ -1,0 +1,278 @@
+"""Continuous-batching scheduler: admission, chunked prefill, preemption.
+
+This module is the serving control plane's POLICY — it owns no threads, no
+locks and no device dispatch.  The :class:`~repro.serving.engine.
+ServingEngine` keeps the mechanisms (handler threads, the BRAVO host locks,
+the registry lease batches, the jitted steps) and consults the scheduler for
+every decision: who is admitted, what runs this tick, who grows, who is
+evicted.  That split is deliberate: the lock-protocol work of PR 1-3 lives
+entirely in the engine's mechanism layer, and the scheduler can be unit
+tested as a pure state machine.
+
+Per-request FSM (:class:`SlotState`)::
+
+    WAITING --admit--> PREFILL --chunks done--> DECODE --max_new--> DONE
+                          ^                        |
+       (re-admit) ---- EVICTED <---page pressure---'
+       (EVICTED slots queue alongside WAITING ones; admission treats
+        them alike, at the head of the queue)
+
+* **Admission control** bounds in-flight work two ways, following
+  "Avoiding Scalability Collapse by Restricting Concurrency" (Dice &
+  Kogan): a hard slot cap (``max_slots`` — the concurrency-restriction
+  watermark on the readers hitting the lease fast path every step) and a
+  KV-page watermark (``admit_free_frac`` — a request is only admitted if
+  its pages fit without pushing the pool below the floor).
+* **Chunked prefill** interleaves with decode: each prefill tick processes
+  at most ``prefill_rows`` requests and ``token_budget`` prompt tokens,
+  cut into right-aligned chunks of ``prefill_chunk``; between prefill
+  ticks, ``decode_ticks_per_prefill`` decode ticks run so admitted
+  requests keep streaming tokens.  Chunks attend to the already-paged
+  prefix, so nothing is recomputed across ticks.
+* **Preemption** is ordered by page pressure from the
+  :class:`~repro.serving.kv_pool.KVPool`: when an allocation cannot be
+  served, the newest slot (LIFO — protects oldest work from starvation) is
+  evicted, its pages reclaimed, and its request requeued with the tokens
+  generated so far folded into the prompt — greedy decoding makes the
+  continuation deterministic, so eviction never changes output.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+from typing import Any, Deque, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["Phase", "SlotState", "SchedulerConfig", "Plan", "Scheduler"]
+
+
+class Phase(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+    EVICTED = "evicted"
+
+
+@dataclasses.dataclass
+class SlotState:
+    """One request's scheduler state (the FSM node).
+
+    ``prefix`` starts as the prompt; on eviction the tokens generated so
+    far are folded into it, so a re-admitted slot re-prefills prompt +
+    generated and continues exactly where it left off."""
+
+    rid: int
+    prefix: np.ndarray                  # (S,) int32 tokens to prefill
+    max_new: int
+    phase: Phase = Phase.WAITING
+    row: int = -1                       # decode-batch row while scheduled
+    prefill_pos: int = 0                # prefix tokens already paged
+    pos: int = 0                        # total valid cache length
+    out: List[int] = dataclasses.field(default_factory=list)
+    pages: List[int] = dataclasses.field(default_factory=list)
+    evictions: int = 0
+    seq: int = -1                       # admission order (victim choice)
+    request: Any = None                 # engine Request (opaque here)
+
+    @property
+    def n_prefix(self) -> int:
+        return len(self.prefix)
+
+    @property
+    def remaining_prefill(self) -> int:
+        return self.n_prefix - self.prefill_pos
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Scheduler policy knobs (all pure host-side; shapes that feed jitted
+    steps — ``max_slots``, ``prefill_rows``, ``prefill_chunk``, the page
+    geometry — are fixed so the engine compiles each step exactly once)."""
+
+    max_slots: int = 4            # concurrency-restriction watermark
+    page_size: int = 16
+    max_seq: int = 128            # per-request prompt + generation bound
+    prefill_chunk: int = 32       # tokens per prefill chunk (compile shape)
+    prefill_rows: int = 2         # prefill batch height (compile shape)
+    token_budget: int = 64        # prompt tokens per prefill tick
+    admit_free_frac: float = 0.0  # admission floor: keep this fraction free
+    decode_ticks_per_prefill: int = 1   # interleave ratio
+
+    @property
+    def lanes(self) -> int:
+        """Page-index lanes per request (covers max_seq)."""
+        return -(-self.max_seq // self.page_size)
+
+    def pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+
+@dataclasses.dataclass
+class Plan:
+    """One tick's work order, executed by the engine."""
+    kind: str                            # "prefill" | "decode" | "idle"
+    slots: List[SlotState]
+    chunks: List[int] = dataclasses.field(default_factory=list)  # prefill
+    grow: List[SlotState] = dataclasses.field(default_factory=list)  # decode
+
+
+class Scheduler:
+    """Continuous-batching policy over a fixed pool of batch rows."""
+
+    def __init__(self, config: SchedulerConfig, n_pages: int):
+        self.cfg = config
+        self.n_pages = n_pages
+        self.waiting: Deque[SlotState] = collections.deque()
+        self.running: Dict[int, SlotState] = {}      # row -> slot
+        self._free_rows = list(range(config.max_slots - 1, -1, -1))
+        self._seq = 0
+        self._since_prefill = config.decode_ticks_per_prefill
+        self.admissions = 0
+        self.evictions = 0
+        self.finished = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, st: SlotState) -> None:
+        if st.n_prefix + st.max_new > self.cfg.max_seq:
+            raise ValueError(
+                f"request {st.rid}: prompt {st.n_prefix} + max_new "
+                f"{st.max_new} exceeds max_seq {self.cfg.max_seq}")
+        st.phase = Phase.WAITING
+        self.waiting.append(st)
+
+    def admit(self, free_pages: int) -> List[SlotState]:
+        """Admission control: move WAITING slots to PREFILL while a batch
+        row is free and the slot's pages fit above the admission watermark.
+        The caller allocates the returned slots' pages (and calls
+        :meth:`defer` on any whose allocation fails after all)."""
+        floor = self.cfg.admit_free_frac * self.n_pages
+        admitted: List[SlotState] = []
+        while self.waiting and self._free_rows:
+            st = self.waiting[0]
+            need = self.cfg.pages_for(st.n_prefix + 1)
+            if free_pages - need < floor:
+                break
+            self.waiting.popleft()
+            st.row = self._free_rows.pop()
+            st.seq = self._seq
+            self._seq += 1
+            st.phase = Phase.PREFILL
+            st.prefill_pos = st.pos = 0
+            self.running[st.row] = st
+            self.admissions += 1
+            free_pages -= need
+            admitted.append(st)
+        return admitted
+
+    def defer(self, st: SlotState) -> None:
+        """Undo an admission whose page allocation failed: back to the head
+        of the queue (oldest work keeps priority)."""
+        self._release_row(st)
+        st.phase = Phase.WAITING
+        self.waiting.appendleft(st)
+
+    def _release_row(self, st: SlotState) -> None:
+        self.running.pop(st.row, None)
+        if st.row >= 0:
+            self._free_rows.append(st.row)
+        st.row = -1
+
+    # ----------------------------------------------------------------- plan
+    def plan(self) -> Plan:
+        """Pick this tick's work: prefill and decode interleave at the
+        configured ratio; prefill is chunked to ``token_budget`` tokens
+        over at most ``prefill_rows`` slots, oldest first."""
+        prefill = sorted((s for s in self.running.values()
+                          if s.phase is Phase.PREFILL), key=lambda s: s.seq)
+        decode = sorted((s for s in self.running.values()
+                         if s.phase is Phase.DECODE), key=lambda s: s.row)
+        if prefill and (not decode or self._since_prefill
+                        >= self.cfg.decode_ticks_per_prefill):
+            chosen, chunks = [], []
+            budget = self.cfg.token_budget
+            for st in prefill:
+                c = min(self.cfg.prefill_chunk, st.remaining_prefill, budget)
+                if c <= 0:
+                    break
+                chosen.append(st)
+                chunks.append(c)
+                budget -= c
+                if len(chosen) == self.cfg.prefill_rows:
+                    break
+            if chosen:
+                self._since_prefill = 0
+                return Plan("prefill", chosen, chunks=chunks)
+        if decode:
+            self._since_prefill += 1
+            # the step writes the pending token's K/V at position pos - 1
+            grow = [st for st in decode
+                    if st.pos > len(st.pages) * self.cfg.page_size]
+            return Plan("decode", decode, grow=grow)
+        if prefill:   # interleave counter said decode, but none exists
+            self._since_prefill = self.cfg.decode_ticks_per_prefill
+            return self.plan()
+        return Plan("idle", [])
+
+    # ------------------------------------------------------------- progress
+    def on_prefill(self, st: SlotState, chunk: int) -> bool:
+        """Record a prefilled chunk; returns True when the prefix is fully
+        paged (the slot moves to DECODE and the tick's last-column token is
+        this request's next generated token)."""
+        st.prefill_pos += chunk
+        st.pos = st.prefill_pos
+        if st.prefill_pos >= st.n_prefix:
+            st.phase = Phase.DECODE
+            return True
+        return False
+
+    def on_token(self, st: SlotState, token: int) -> bool:
+        """Record a generated token; returns True when the request is done
+        (caller reclaims pages and frees the row via :meth:`finish`)."""
+        st.out.append(token)
+        st.pos += 1
+        return len(st.out) >= st.max_new
+
+    def finish(self, st: SlotState) -> None:
+        self._release_row(st)
+        st.phase = Phase.DONE
+        st.pages = []
+        self.finished += 1
+
+    # ------------------------------------------------------------ preemption
+    def pick_victim(self, exclude: Optional[SlotState] = None
+                    ) -> Optional[SlotState]:
+        """Newest running slot (LIFO — oldest work is never starved),
+        preferring DECODE victims over mid-PREFILL ones."""
+        cands = [s for s in self.running.values() if s is not exclude]
+        if not cands:
+            return None
+        decode = [s for s in cands if s.phase is Phase.DECODE]
+        pool = decode or cands
+        return max(pool, key=lambda s: s.seq)
+
+    def evict(self, st: SlotState) -> None:
+        """Preempt ``st``: fold generated tokens into the prefix (greedy
+        decode makes the continuation deterministic — output is unchanged)
+        and requeue at the head.  Caller reclaims the pages."""
+        self._release_row(st)
+        if st.out:
+            st.prefix = np.concatenate(
+                [st.prefix, np.asarray(st.out, st.prefix.dtype)])
+        st.prefill_pos = st.pos = 0
+        st.pages = []
+        st.phase = Phase.EVICTED     # queued for re-admission; admit()
+        st.evictions += 1            # moves it (back) to PREFILL
+        self.evictions += 1
+        self.waiting.appendleft(st)
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {"waiting": len(self.waiting),
+                "running": len(self.running),
+                "admissions": self.admissions,
+                "evictions": self.evictions,
+                "finished": self.finished}

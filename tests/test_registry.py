@@ -419,3 +419,28 @@ def test_registry_exhaustion_and_refill():
     h = reg.alloc()
     assert h.idx == hs[2].idx
     assert reg.stats()["live_locks"] == 4
+
+
+def test_sharded_revoke_clears_only_owning_lane():
+    """Multi-pod revocation with rbias sharded WITH the table: the revoked
+    lock's bias lane clears on its owning shard (no MAX_LOCKS broadcast),
+    other lanes keep their bias, and the hierarchical count is exact."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.core.registry import make_sharded_revoke
+
+    reg = BravoRegistry(slots=SLOTS)
+    noisy = reg.alloc("noisy")
+    bystander = reg.alloc("bystander")
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("pod", "data"))
+    fn = make_sharded_revoke(mesh, axis=("pod", "data"))
+    table = jnp.asarray(np.asarray(reg.table))
+    table = table.at[1, 3].set(noisy.lock_id).at[2, 77].set(noisy.lock_id) \
+                 .at[0, 9].set(bystander.lock_id)
+    with mesh:
+        rbias, cnt = fn(table, reg.rbias, noisy)
+    rbias = np.asarray(rbias)
+    assert int(cnt) == 2                      # bystander leases not counted
+    assert rbias[noisy.idx] == 0
+    assert rbias[bystander.idx] == 1
