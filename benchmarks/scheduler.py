@@ -273,6 +273,11 @@ def bench_throughput(max_new: int) -> dict:
             "tokens_per_s": round(toks / wall, 2),
             "wall_s": round(wall, 3),
             "evictions": e2.scheduler.evictions,
+            # post-dedup admission charge (PR 5): pages actually allocated
+            # after prefix-cache hits — comparable across PRs even as the
+            # dedup changes how many pages a request pays for
+            "pages_charged": e2.stats.pages_charged,
+            "pages_saved": e2.stats.pages_saved,
             **_latency_stats(e2)}
     return {"legacy_engine": {"tokens_per_s":
                               round(legacy_toks / legacy_wall, 2),

@@ -32,3 +32,9 @@ python -m benchmarks.registry --smoke
 # (scheduler-driven engine == dense-cache loop, token for token), the
 # zero-transfer lease fast path, and a 2D-mesh scheduler run
 python -m benchmarks.scheduler --smoke
+
+# chunk-prefill + prefix-cache smoke: the streaming chunk kernel vs
+# kernels/ref.py (bit-exact), the no-dense-KV-materialization HLO gate,
+# the zero-transfer chunk attention check, and the dedup sweep (>= 2x
+# page-allocation reduction at 90% shared prompts, refcounts drain to 0)
+python -m benchmarks.prefill --smoke

@@ -183,9 +183,36 @@ class BravoRegistry:
         # must not upload anything (jax.transfer_guard-clean)
         self._one = jnp.ones((), jnp.int32)
         self._zero = jnp.zeros((), jnp.int32)
+        # multi-pod mode (configure_mesh): revoke clears the bias lane on
+        # its OWNING shard and polls with the hierarchical-psum count
+        self._mesh = None
+        self._sharded_revoke = None
         self.publishes = 0
         self.allocs = 0
         self.recycles = 0
+
+    def configure_mesh(self, mesh, axis=("pod", "data")) -> None:
+        """Route revocation through :func:`make_sharded_revoke` — the
+        ROADMAP follow-up for live multi-pod meshes.  The per-lock rbias
+        vector is sharded WITH the table, so ``revoke`` clears only the
+        lane on the shard that owns it (no MAX_LOCKS broadcast over the
+        DCN), and the drain's match counts reduce hierarchically (psum the
+        ICI axis first, one scalar per pod on the cross-pod fabric)
+        instead of each poll scanning a replicated table.  Everything
+        else — per-lock drain gates, the adaptive inhibit policy, the
+        host shadow vectors — is unchanged.  Pass ``mesh=None`` to drop
+        back to the host-path revoke."""
+        with self._mu:
+            if mesh is None:
+                self._mesh = self._sharded_revoke = None
+                return
+            axes = (axis,) if isinstance(axis, str) else tuple(axis)
+            lanes = 1
+            for a in axes:
+                lanes *= mesh.shape[a]
+            assert self.max_locks % lanes == 0, (self.max_locks, lanes)
+            self._mesh = mesh
+            self._sharded_revoke = make_sharded_revoke(mesh, axes)
 
     # ------------------------------------------------------- lock lifecycle
     def alloc(self, name: Optional[str] = None) -> "RegistryHandle":
@@ -306,12 +333,22 @@ class BravoRegistry:
                pipeline_depth: int = 2) -> int:
         """Clear ``h``'s bias lane (only!), drain its leases, and set its
         per-lock inhibit deadline from its measured revocation cost.  Other
-        locks' biases, drains and rearms are untouched throughout."""
+        locks' biases, drains and rearms are untouched throughout.
+
+        With a mesh configured (:meth:`configure_mesh`) the lane clear and
+        the drain polls both run through the sharded collective: the clear
+        lands on the lane's owning shard, and each poll reduces
+        hierarchically instead of scanning a replicated table."""
         n = self.n if n is None else n
         idx = h.idx
+        sharded = self._sharded_revoke
         with self._mu:
             self._check_open(h)
-            self.rbias = _programs().scatter(self.rbias, h._idx, self._zero)
+            if sharded is not None:
+                self.rbias, _ = sharded(self.table, self.rbias, h)
+            else:
+                self.rbias = _programs().scatter(self.rbias, h._idx,
+                                                 self._zero)
             self._armed[idx] = False
             self._revoking[idx] += 1
             self.revocations[idx] += 1
@@ -320,6 +357,11 @@ class BravoRegistry:
             # dispatch under the mutex: the scan is ordered on the current
             # table buffer BEFORE any later acquire/release donates it
             with self._mu:
+                if sharded is not None:
+                    # idempotent re-clear of an already-cleared lane; the
+                    # hierarchical count is the poll result
+                    self.rbias, cnt = sharded(self.table, self.rbias, h)
+                    return cnt
                 return K.revocation_poll(self.table, lid)
 
         try:

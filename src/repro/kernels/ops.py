@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from .paged_attn import _paged_attn_call
+from .paged_chunk_attn import _chunk_attn_call
 from .table_publish import (_fused_publish_call, _fused_publish_multi_call,
                             _publish_call)
 from .table_scan import LANES, _multi_poll_call, _poll_call, _scan_call
@@ -18,7 +19,7 @@ from .table_scan import LANES, _multi_poll_call, _poll_call, _scan_call
 __all__ = ["as_table2d", "revocation_scan", "revocation_poll",
            "revocation_poll_multi", "publish", "clear", "fused_publish",
            "fused_publish_multi", "fused_clear", "paged_attention",
-           "jit_donating", "LANES"]
+           "paged_chunk_attention", "jit_donating", "LANES"]
 
 
 def _interpret() -> bool:
@@ -112,6 +113,23 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     cache is never materialized."""
     return _paged_attn_call(q, k_pages, v_pages, page_idx, cache_len,
                             interpret=_interpret())
+
+
+def paged_chunk_attention(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, page_idx: jax.Array,
+                          cache_len: jax.Array,
+                          new_lens: jax.Array) -> jax.Array:
+    """Streaming chunk-prefill attention over the KV pool's page store.
+
+    q: (B, S, H, hd) right-aligned prompt chunks; k/v_pages: (n_pages,
+    page_size, KVH, hd); page_idx: (B, P) int32 (-1 = unused lane);
+    cache_len: (B,) total valid length AFTER the chunk; new_lens: (B,)
+    valid trailing columns per row.  -> (B, S, H, hd), padding columns
+    zero.  Pages stream through VMEM via scalar-prefetched block indices —
+    the dense (B, lanes * page_size, KVH, hd) gather of the PR-4 prefill
+    path is never materialized."""
+    return _chunk_attn_call(q, k_pages, v_pages, page_idx, cache_len,
+                            new_lens, interpret=_interpret())
 
 
 def revocation_poll(table2d: jax.Array, lock_id) -> jax.Array:

@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: streaming chunk-prefill attention over the KV pool.
+
+PR 4's chunked prefill was the last dense detour on the paged data plane:
+``make_paged_prefill_step`` scattered each chunk's K/V into the page store
+and then *gathered every page back out densely* — a ``(B, lanes * ps, KVH,
+hd)`` materialization per layer per tick — before attending.  Decode already
+streamed pages through ``kernels.paged_attn``; this kernel closes the gap
+for the S > 1 prefill path, so prompt chunks read the page store in place
+too and the dense per-request KV buffer never exists anywhere.
+
+Layout and grid
+---------------
+* ``q``: ``(B, S, H, hd)`` — one RIGHT-ALIGNED prompt chunk per row (row
+  i's last ``new_lens[i]`` columns are real tokens; the leading columns are
+  padding).  Column ``j``'s absolute position is ``cache_len - S + j``.
+* ``k_pages``/``v_pages``: ``(n_pages, page_size, KVH, hd)`` — the pool's
+  page store, shared by every request.
+* grid = ``(B, NQ, P)`` with ``NQ = S / block_q`` query blocks and ``P``
+  page lanes: TPU grid steps run sequentially on a core, so the per-(row,
+  q-block) softmax state (m/l/acc scratch) accumulates across the ``P``
+  inner steps and the output block is emitted at the last page.
+* ``page_idx``/``cache_len``/``new_lens`` ride in as **scalar-prefetch**
+  operands (``PrefetchScalarGridSpec``): the index map reads
+  ``page_idx[b, p]`` to pick which page tile the next grid step DMAs — the
+  gather happens in the block-fetch pipeline, never as a materialized
+  ``take``.  Unused lanes (``page_idx < 0``) clamp to page 0 and are
+  masked out of the softmax.
+
+Masking (all inside the kernel, per (q position, kv position) pair):
+* kv position ``t`` is valid iff ``t < cache_len[b]`` and its lane holds a
+  real page — the chunk attends to the WHOLE already-paged prefix plus its
+  own freshly scattered K/V;
+* causality at the right-aligned chunk boundary: ``t <= q_pos``;
+* padding query columns (``j < S - new_lens[b]``, or rows past their
+  length) are fully masked and emit zeros.
+
+The pure-jnp oracle (:func:`~repro.kernels.ref.paged_chunk_attn_ref`)
+mirrors the (row, q-block, page) walk op for op so the CI smoke gate can
+require bit equality in interpret mode, not just allclose.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pick_block_q(s: int, limit: int = 32) -> int:
+    """Largest divisor of ``s`` that is <= ``limit`` (the VMEM-friendly
+    q-block height); always a divisor — 1 at worst, for prime widths."""
+    for bq in range(min(s, limit), 0, -1):
+        if s % bq == 0:
+            return bq
+    raise AssertionError(s)          # unreachable: 1 divides everything
+
+
+def _chunk_attn_kernel(pi_ref, cl_ref, nl_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref):
+    b = pl.program_id(0)
+    qi = pl.program_id(1)
+    p = pl.program_id(2)
+    n_p = pl.num_programs(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ps, kvh, hd = k_ref.shape[1], k_ref.shape[2], k_ref.shape[3]
+    bq, h = q_ref.shape[1], q_ref.shape[2]
+    n_q = pl.num_programs(1)
+    s_total = bq * n_q
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+
+    page = pi_ref[b, p]
+    clen = cl_ref[b]
+    nl = nl_ref[b]
+    # absolute positions: queries are the chunk's right-aligned columns,
+    # keys are this page's slots; invalid lanes / padding columns masked
+    col = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+    q_pos = clen - s_total + col                           # (bq, 1)
+    valid_q = (col >= s_total - nl) & (q_pos >= 0)
+    t_pos = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    valid = (t_pos < clen) & (page >= 0) & (t_pos <= q_pos) & valid_q
+
+    q = q_ref[0].astype(jnp.float32)                       # (bq, H, hd)
+    k = k_ref[0].astype(jnp.float32)                       # (ps, KVH, hd)
+    v = v_ref[0].astype(jnp.float32)
+    qh = q.reshape(bq, kvh, g, hd)                         # heads grouped by
+    s = jnp.einsum("qkgd,skd->qkgs", qh, k,                # their kv head
+                   preferred_element_type=jnp.float32) * scale
+    s = s.reshape(bq, h, ps)
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+
+    m_prev = m_ref[...]                                    # (bq, H)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    pexp = jnp.where(valid[:, None, :],
+                     jnp.exp(s - m_safe[:, :, None]), 0.0)  # (bq, H, ps)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(pexp, axis=2)
+    pv = jnp.einsum("qkgs,skd->qkgd", pexp.reshape(bq, kvh, g, ps), v,
+                    preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, :, None] + pv.reshape(bq, h, hd)
+    m_ref[...] = m_new
+
+    @pl.when(p == n_p - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-20)                 # fully-masked rows
+        o_ref[0] = (acc_ref[...] / l[:, :, None]).astype(o_ref.dtype)
+        #                                                    (padding) emit 0
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_q"))
+def _chunk_attn_call(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     page_idx: jax.Array, cache_len: jax.Array,
+                     new_lens: jax.Array, interpret: bool = False,
+                     block_q: int = 0) -> jax.Array:
+    """q: (B, S, H, hd) right-aligned chunks; k/v_pages: (n_pages, ps, KVH,
+    hd); page_idx: (B, P) int32 (-1 = unused lane); cache_len: (B,) total
+    valid length AFTER the chunk; new_lens: (B,) valid trailing columns.
+    -> (B, S, H, hd) (padding columns zero)."""
+    b, s, h, hd = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    n_p = page_idx.shape[1]
+    assert h % kvh == 0, (h, kvh)
+    bq = block_q or _pick_block_q(s)
+    assert s % bq == 0, (s, bq)
+    n_q = s // bq
+
+    def kv_map(bi, qi, p, idx_ref, cl_ref, nl_ref):
+        return (jnp.maximum(idx_ref[bi, p], 0), 0, 0, 0)
+
+    def q_map(bi, qi, p, idx_ref, cl_ref, nl_ref):
+        return (bi, qi, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,            # page_idx, cache_len, new_lens
+        grid=(b, n_q, n_p),
+        in_specs=[
+            pl.BlockSpec((1, bq, h, hd), q_map),
+            pl.BlockSpec((1, ps, kvh, hd), kv_map),
+            pl.BlockSpec((1, ps, kvh, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, h, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((bq, h), jnp.float32),      # running max
+            pltpu.VMEM((bq, h), jnp.float32),      # running denominator
+            pltpu.VMEM((bq, h, hd), jnp.float32),  # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        _chunk_attn_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, s, h, hd), q.dtype),
+        interpret=interpret,
+    )(page_idx.astype(jnp.int32), cache_len.astype(jnp.int32),
+      new_lens.astype(jnp.int32), q, k_pages, v_pages)

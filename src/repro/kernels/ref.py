@@ -120,3 +120,104 @@ def paged_attn_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
             m = m_new
         outs.append(acc / jnp.maximum(den, 1e-20))
     return jnp.stack(outs).astype(q.dtype)
+
+
+def paged_chunk_attn_ref(q: jax.Array, k_pages: jax.Array,
+                         v_pages: jax.Array, page_idx: jax.Array,
+                         cache_len: jax.Array, new_lens: jax.Array,
+                         block_q: int = 0) -> jax.Array:
+    """Oracle for the streaming chunk-prefill attention kernel.
+
+    Walks (row, q-block, page) in the SAME order as the kernel's grid
+    (online softmax, one page per inner step, identical per-block einsums)
+    so interpret-mode runs can be compared bit for bit — run the oracle
+    under ``jax.jit`` for the comparison, like :func:`paged_attn_ref`.
+    q: (B, S, H, hd) right-aligned chunks; k/v_pages: (n_pages, ps, KVH,
+    hd); page_idx: (B, P) int32 (-1 = unused); cache_len: (B,) total valid
+    length AFTER the chunk; new_lens: (B,) valid trailing columns.
+    -> (B, S, H, hd) (padding columns zero).
+    """
+    from .paged_chunk_attn import _pick_block_q
+
+    b, s, h, hd = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    n_p = page_idx.shape[1]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    bq = block_q or _pick_block_q(s)
+    assert s % bq == 0, (s, bq)      # same contract as the kernel call
+    outs = []
+    for bi in range(b):
+        rows = []
+        for qi in range(s // bq):
+            col = qi * bq + jnp.arange(bq)[:, None]            # (bq, 1)
+            q_pos = cache_len[bi] - s + col
+            valid_q = (col >= s - new_lens[bi]) & (q_pos >= 0)
+            qh = q[bi, qi * bq:(qi + 1) * bq].astype(
+                jnp.float32).reshape(bq, kvh, g, hd)
+            m = jnp.full((bq, h), -jnp.inf, jnp.float32)
+            den = jnp.zeros((bq, h), jnp.float32)
+            acc = jnp.zeros((bq, h, hd), jnp.float32)
+            for p in range(n_p):
+                page = page_idx[bi, p]
+                k = k_pages[jnp.clip(page, 0)].astype(jnp.float32)
+                v = v_pages[jnp.clip(page, 0)].astype(jnp.float32)
+                t_pos = p * ps + jnp.arange(ps)[None, :]       # (1, ps)
+                valid = (t_pos < cache_len[bi]) & (page >= 0) \
+                    & (t_pos <= q_pos) & valid_q
+                sc = jnp.einsum("qkgd,skd->qkgs", qh, k,
+                                preferred_element_type=jnp.float32) * scale
+                sc = jnp.where(valid[:, None, :],
+                               sc.reshape(bq, h, ps), -jnp.inf)
+                m_new = jnp.maximum(m, jnp.max(sc, axis=2))
+                m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+                pexp = jnp.where(valid[:, None, :],
+                                 jnp.exp(sc - m_safe[:, :, None]), 0.0)
+                corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+                den = den * corr + jnp.sum(pexp, axis=2)
+                pv = jnp.einsum("qkgs,skd->qkgd",
+                                pexp.reshape(bq, kvh, g, ps), v,
+                                preferred_element_type=jnp.float32)
+                acc = acc * corr[:, :, None] + pv.reshape(bq, h, hd)
+                m = m_new
+            rows.append(acc / jnp.maximum(den, 1e-20)[:, :, None])
+        outs.append(jnp.concatenate(rows, axis=0))
+    return jnp.stack(outs).astype(q.dtype)
+
+
+def paged_chunk_dense_ref(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, page_idx: jax.Array,
+                          cache_len: jax.Array,
+                          new_lens: jax.Array) -> jax.Array:
+    """The PR-4 dense chunk-attention path (gather every page into a
+    contiguous ``(B, lanes * ps, KVH, hd)`` buffer, one full softmax):
+    kept as the allclose cross-check and the benchmark's dense baseline —
+    this materialization is exactly what the streaming kernel avoids."""
+    b, s, h, hd = q.shape
+    n_pages, ps, kvh, _ = k_pages.shape
+    n_lanes = page_idx.shape[1]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    q_pos = cache_len[:, None] - s + jnp.arange(s)[None, :]       # (B, S)
+    valid_q = (jnp.arange(s)[None, :] >= s - new_lens[:, None]) \
+        & (q_pos >= 0)
+    safe = jnp.clip(page_idx, 0)
+    kd = k_pages[safe].reshape(b, n_lanes * ps, kvh, hd).astype(jnp.float32)
+    vd = v_pages[safe].reshape(b, n_lanes * ps, kvh, hd).astype(jnp.float32)
+    t = jnp.arange(n_lanes * ps)
+    valid_t = (t[None, :] < cache_len[:, None]) \
+        & jnp.repeat(page_idx >= 0, ps, axis=1)                   # (B, T)
+    qh = q.astype(jnp.float32).reshape(b, s, kvh, g, hd)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qh, kd,
+                    preferred_element_type=jnp.float32) * scale
+    mask = valid_t[:, None, None, None, :] \
+        & (t[None, None, None, None, :] <= q_pos[:, None, None, :, None]) \
+        & valid_q[:, None, None, :, None]
+    sc = jnp.where(mask, sc, -jnp.inf)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)     # fully-masked (padded) rows
+    pexp = jnp.where(mask, jnp.exp(sc - m), 0.0)
+    den = jnp.maximum(jnp.sum(pexp, axis=-1, keepdims=True), 1e-20)
+    o = jnp.einsum("bkgst,btkd->bskgd", pexp / den, vd,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, s, h, hd).astype(q.dtype)

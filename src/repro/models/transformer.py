@@ -104,38 +104,40 @@ def _paged_attention_sharded(q, k_pages, v_pages, pages, cache_len,
     return K.paged_attention(q, k_pages, v_pages, pages, cache_len)
 
 
-def _paged_chunk_attention(q, k_pages, v_pages, pages, cache_len,
-                           q_pos, valid_q):
-    """Chunked-prefill attention: the chunk's queries (q: (B, S, H, hd) at
-    absolute positions ``q_pos``) attend causally to every valid position
-    in their request's pages.  The pages are gathered dense here — prefill
-    is compute-bound and runs off the decode hot path; only the S == 1
-    decode step uses the streaming gather-by-page kernel."""
-    b, s, h, hd = q.shape
-    n_pages, ps, kvh, _ = k_pages.shape
-    n_lanes = pages.shape[1]
-    g = h // kvh
-    scale = 1.0 / math.sqrt(hd)
-    safe = jnp.clip(pages, 0)
-    kd = k_pages[safe].reshape(b, n_lanes * ps, kvh, hd).astype(jnp.float32)
-    vd = v_pages[safe].reshape(b, n_lanes * ps, kvh, hd).astype(jnp.float32)
-    t = jnp.arange(n_lanes * ps)
-    valid_t = (t[None, :] < cache_len[:, None]) \
-        & jnp.repeat(pages >= 0, ps, axis=1)                     # (B, T)
-    qh = q.astype(jnp.float32).reshape(b, s, kvh, g, hd)
-    sc = jnp.einsum("bskgd,btkd->bkgst", qh, kd,
-                    preferred_element_type=jnp.float32) * scale
-    mask = valid_t[:, None, None, None, :] \
-        & (t[None, None, None, None, :] <= q_pos[:, None, None, :, None]) \
-        & valid_q[:, None, None, :, None]
-    sc = jnp.where(mask, sc, -jnp.inf)
-    m = jnp.max(sc, axis=-1, keepdims=True)
-    m = jnp.where(jnp.isfinite(m), m, 0.0)     # fully-masked (padded) rows
-    pexp = jnp.where(mask, jnp.exp(sc - m), 0.0)
-    den = jnp.maximum(jnp.sum(pexp, axis=-1, keepdims=True), 1e-20)
-    o = jnp.einsum("bkgst,btkd->bskgd", pexp / den, vd,
-                   preferred_element_type=jnp.float32)
-    return o.reshape(b, s, h, hd).astype(q.dtype)
+def _paged_chunk_attention(q, k_pages, v_pages, pages, cache_len, new_lens,
+                           mesh, data_axes):
+    """Chunked-prefill attention: the chunk's right-aligned queries attend
+    causally to every valid position in their request's pages, STREAMED
+    through the ``kernels.paged_chunk_attn`` Pallas kernel — the pages
+    feed the MXU one scalar-prefetched tile at a time, so the dense
+    ``(B, lanes * page_size, KVH, hd)`` gather of the PR-4 path (a full
+    per-request KV materialization per layer per tick) never exists.  The
+    dense formulation survives as ``kernels.ref.paged_chunk_dense_ref``
+    (the allclose cross-check and benchmark baseline).
+
+    Multi-host wiring mirrors :func:`_paged_attention_sharded`: a
+    ``pallas_call`` is opaque to the SPMD partitioner (the dense jnp path
+    partitioned for free; the kernel would replicate), so when the data
+    axes are live and divide the batch the rows shard explicitly via
+    ``shard_map_compat`` and each shard streams only ITS rows' pages; the
+    page store replicates (it is the pool)."""
+    b = q.shape[0]
+    if mesh is not None and not getattr(mesh, "empty", False):
+        bax = tuple(a for a in data_axes if a in mesh.axis_names)
+        nb = 1
+        for a in bax:
+            nb *= mesh.shape[a]
+        if nb > 1 and b % nb == 0:
+            def body(q_, pg_, cl_, nl_, kp_, vp_):
+                return K.paged_chunk_attention(q_, kp_, vp_, pg_, cl_, nl_)
+
+            return shard_map_compat(
+                body, mesh=mesh,
+                in_specs=(P(bax), P(bax), P(bax), P(bax), P(), P()),
+                out_specs=P(bax), check_vma=False)(
+                    q, pages, cache_len, new_lens, k_pages, v_pages)
+    return K.paged_chunk_attention(q, k_pages, v_pages, pages, cache_len,
+                                   new_lens)
 
 
 def attn_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
@@ -189,8 +191,10 @@ def attn_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
             o = _paged_attention_sharded(q[:, 0], kc, vc, pages, cache_len,
                                          mesh, data_axes)[:, None]
         else:
-            o = _paged_chunk_attention(q, kc, vc, pages, cache_len,
-                                       t_new, valid_new)
+            nl = new_lens if new_lens is not None \
+                else jnp.full((B,), S, jnp.int32)
+            o = _paged_chunk_attention(q, kc, vc, pages, cache_len, nl,
+                                       mesh, data_axes)
         new_cache = {"k": kc, "v": vc}
     elif cache is None:
         if seqshard and mesh is not None:

@@ -67,7 +67,7 @@ from ..core.factory import LockEnv
 from ..core.registry import BravoRegistry, RegistryHandle
 from ..models import model as M
 from ..models.common import ModelConfig
-from .kv_pool import KVPool
+from .kv_pool import KVPool, page_keys
 from .scheduler import Phase, Scheduler, SchedulerConfig, SlotState
 from .steps import (jit_step, make_decode_step, make_paged_prefill_step,
                     make_prefill_step)
@@ -94,6 +94,11 @@ class EngineStats:
     weight_swaps: int = 0
     compactions: int = 0
     read_acquires: int = 0
+    # prefix-cache accounting (scheduler mode)
+    pages_charged: int = 0     # pages actually allocated at admission
+    pages_saved: int = 0       # prompt pages served by shared reference
+    cow_copies: int = 0        # partial-page divergences copied on write
+    cached_tokens: int = 0     # prompt tokens whose prefill was skipped
 
 
 class ModelStore:
@@ -265,6 +270,50 @@ class PageTable:
             self.lock.release_write(tok)
         return int(cnt)                                # sync OUTSIDE
 
+    # ---------------------------------------------------- prefix cache (PR 5)
+    # All four run in pool mode only (the scheduler's data plane).  The
+    # refcount mutators take the host WRITE lock for thread exclusion but
+    # dispatch-only under it (materialize after release, like allocate) —
+    # and none of them revokes a stripe bias: refcounts never change a
+    # live rid's page mask or any page a leased reader can address, so a
+    # prefix hit costs no reader its fast path.
+
+    def match_prefix(self, kh, kl, ln):
+        """Peek the prefix index (read lock; no refs taken)."""
+        tok = self.lock.acquire_read()
+        try:
+            return self.pool.match_prefix(kh, kl, ln)
+        finally:
+            self.lock.release_read(tok)
+
+    def acquire_prefix(self, kh, kl, ln, take):
+        """Take refs on the hit run's ``take``-selected pages; -> (per-key
+        page list, free pages consumed)."""
+        tok = self.lock.acquire_write()
+        try:
+            res = self.pool.acquire_prefix_async(kh, kl, ln, take)
+        finally:
+            self.lock.release_write(tok)
+        return self.pool.materialize_prefix(*res)      # sync OUTSIDE
+
+    def insert_prefix(self, rid: int, kh, kl, ln, lane_pages) -> List[bool]:
+        """Publish a request's written prompt pages; -> converted mask."""
+        tok = self.lock.acquire_write()
+        try:
+            ins = self.pool.insert_prefix_async(rid, kh, kl, ln, lane_pages)
+        finally:
+            self.lock.release_write(tok)
+        return np.asarray(ins).tolist()                # sync OUTSIDE
+
+    def release_refs(self, pages) -> int:
+        """Drop refs on shared pages; -> pages freed (refcount hit 0)."""
+        tok = self.lock.acquire_write()
+        try:
+            cnt = self.pool.release_refs_async(pages)
+        finally:
+            self.lock.release_write(tok)
+        return int(cnt)                                # sync OUTSIDE
+
     def compact(self, live=None) -> int:
         """Background compaction tick.
 
@@ -372,6 +421,12 @@ class ServingEngine:
                 make_paged_prefill_step(cfg, mesh, rules),
                 donate_argnums=(1,))
             self._bump = jax.jit(lambda c, a: c + a)
+            # copy-on-write: duplicate one page of the store (all layers,
+            # K and V) into a private page before a divergent write
+            self._copy_page = jit_step(
+                lambda kv, src, dst: jax.tree.map(
+                    lambda x: x.at[:, dst].set(x[:, src]), kv),
+                donate_argnums=(0,))
             self._free_est = n_pages        # host mirror of pool pressure
             self._compact_req = False
             self.step_ns: "collections.deque[int]" = collections.deque(
@@ -477,10 +532,14 @@ class ServingEngine:
             if r is not None:        # None = legacy stop sentinel; the
                 self._submit_slot(r)  # loop exits via _stop instead
 
-    def _bind_pages(self, st: SlotState, pages: List[int]) -> None:
+    def _bind_pages(self, st: SlotState, pages: List[int],
+                    charged: Optional[int] = None) -> None:
+        """Append pages to the slot's lanes.  ``charged`` is how many FREE
+        pages this binding consumed — shared-by-ref pages cost nothing
+        unless the ref revived a refcount-0 cached page."""
         base = len(st.pages)
         st.pages.extend(pages)
-        self._free_est -= len(pages)
+        self._free_est -= len(pages) if charged is None else charged
         self._page_tbl = self._page_tbl.at[
             st.row, base:base + len(pages)].set(
                 jnp.asarray(pages, jnp.int32))   # one dispatch, static slice
@@ -492,17 +551,29 @@ class ServingEngine:
         self._rids = self._rids.at[row].set(-1)
         self._active = self._active.at[row].set(0)
 
+    def _release_slot_pages(self, st: SlotState) -> int:
+        """Return a slot's pages to the pool: drop its refs on shared
+        prefix pages (a page is freed only at refcount 0 — a surviving
+        sharer's pages are never touched), then reclaim its privates."""
+        freed = 0
+        if st.shared_refs:
+            freed += self.pages.release_refs(
+                np.asarray(st.shared_refs, np.int32))
+            st.shared_refs = []
+        return freed + self.pages.reclaim(st.rid)
+
     def _evict(self, st: SlotState) -> None:
-        """Preempt under page pressure: reclaim, requeue (the scheduler
-        folds generated tokens into the prefix), clear the row."""
+        """Preempt under page pressure: drop refs + reclaim, requeue (the
+        scheduler folds generated tokens into the prefix), clear the
+        row."""
         row = st.row
-        self._free_est += self.pages.reclaim(st.rid)
+        self._free_est += self._release_slot_pages(st)
         self.scheduler.evict(st)
         self._clear_row(row)
 
     def _finish(self, st: SlotState) -> None:
         row = st.row
-        self._free_est += self.pages.reclaim(st.rid)
+        self._free_est += self._release_slot_pages(st)
         self.scheduler.finish(st)
         self._clear_row(row)
         r = st.request
@@ -523,15 +594,109 @@ class ServingEngine:
                 return False
             self._evict(victim)
 
+    def _peek_need(self, st: SlotState) -> int:
+        """Post-dedup page charge for admission: a request pays only for
+        the pages its prompt does NOT share with the prefix cache (plus
+        any refcount-0 cached pages a hit would pin — those come off the
+        free list too).  Also records the slot's cache plan: how many
+        prompt tokens are covered, how many pages ride by reference, and
+        whether the boundary page needs a copy-on-write."""
+        sc = self.sched_cfg
+        total = sc.pages_for(st.n_prefix + 1)
+        if not sc.prefix_cache:
+            return total
+        pool = self.kv_pool
+        if st.cache_plan is not None and st.cache_plan[0] == pool.version:
+            return st.cache_plan[4]   # pool unchanged since the last peek:
+        #                               no device round-trip per tick while
+        #                               the slot waits at the watermark
+        if st.keys is None:
+            st.keys = page_keys(st.prefix, sc.page_size, pad_to=sc.lanes)
+        _, n_run, free_hit = self.pages.match_prefix(*st.keys)
+        lens = st.keys[2]
+        # usable coverage: the hit run's tokens, capped so the LAST prompt
+        # token is always recomputed — its logits seed the first generated
+        # token, and the scheduler's contract is exactness, not trust
+        cov = min(int(np.sum(lens[:n_run])), st.n_prefix - 1)
+        k_ref = cov // sc.page_size
+        cow = cov % sc.page_size > 0
+        # charge only the keys the attach will actually pin: refcount-0
+        # hits consume a free page when revived, hits with live holders
+        # are free of charge
+        revived = sum(free_hit[:k_ref + (1 if cow else 0)])
+        need = total - k_ref + revived
+        st.cache_plan = (pool.version, cov, k_ref, cow, need)
+        return need
+
+    def _attach_prefix(self, st: SlotState) -> bool:
+        """Bind an admitted slot's pages, deduplicated against the prefix
+        cache: shared full pages ride by reference (refcount++), a
+        partial-page divergence is COPIED into a private page (never
+        written through — the cache holder may still be appending to it),
+        and only the remainder is freshly allocated.  False -> the pool
+        was short after all; the caller defers the slot."""
+        sc = self.sched_cfg
+        total = sc.pages_for(st.n_prefix + 1)
+        cov, k_ref, cow = (st.cache_plan[1:4] if st.cache_plan
+                           else (0, 0, False))
+        refs: List[int] = []
+        cow_src = -1
+        revived = 0
+        if k_ref or cow:
+            take = np.zeros((sc.lanes,), bool)
+            take[:k_ref + (1 if cow else 0)] = True
+            hit, revived = self.pages.acquire_prefix(*st.keys, take)
+            refs = [p for p in hit[:k_ref] if p >= 0]
+            cow_src = hit[k_ref] if cow else -1
+            if len(refs) != k_ref or (cow and cow_src < 0):
+                # the cache changed between peek and acquire (possible only
+                # if a caller bypasses the scheduler thread): drop whatever
+                # was granted and fall back to a plain allocation.  NO
+                # _free_est credit here — the revives were never debited
+                # (only _bind_pages debits), so crediting the release
+                # would inflate the estimate on every retry
+                got = refs + ([cow_src] if cow_src >= 0 else [])
+                if got:
+                    self.pages.release_refs(np.asarray(got, np.int32))
+                refs, cov, k_ref, cow, cow_src, revived = \
+                    [], 0, 0, False, -1, 0
+        pages = self.pages.allocate(st.rid, total - k_ref)
+        if not pages:
+            if refs or cow_src >= 0:
+                # same rollback rule: the acquire was never debited
+                got = refs + ([cow_src] if cow_src >= 0 else [])
+                self.pages.release_refs(np.asarray(got, np.int32))
+            st.cache_plan = None
+            return False
+        if cow:
+            # lane k_ref: private copy of the divergent boundary page; the
+            # transient ref pinned the source across the copy
+            self._pages_kv = self._copy_page(
+                self._pages_kv, jnp.asarray(cow_src, jnp.int32),
+                jnp.asarray(pages[0], jnp.int32))
+            self._free_est += self.pages.release_refs(
+                np.asarray([cow_src], np.int32))
+        st.shared_refs = refs
+        st.cached_pos = cov
+        st.prefill_pos = st.pos = cov     # chunked prefill resumes here
+        self._rids = self._rids.at[st.row].set(st.rid)
+        self._bind_pages(st, refs + pages, charged=len(pages) + revived)
+        with self._stats_lock:
+            self.stats.pages_charged += len(pages)
+            self.stats.pages_saved += k_ref
+            self.stats.cow_copies += int(cow)
+            self.stats.cached_tokens += cov
+        return True
+
     def _admit(self) -> None:
-        """Admission: the scheduler applies the watermarks; the engine
-        allocates the admitted slots' pages (no eviction on admission —
-        a new request never preempts running work) and binds their rows."""
-        admitted = self.scheduler.admit(self._free_est)
+        """Admission: the scheduler applies the watermarks (charging each
+        request its post-dedup page need); the engine attaches the
+        admitted slots' pages — shared, copied or fresh (no eviction on
+        admission: a new request never preempts running work)."""
+        admitted = self.scheduler.admit(self._free_est,
+                                        need_fn=self._peek_need)
         for i, st in enumerate(admitted):
-            need = self.sched_cfg.pages_for(st.n_prefix + 1)
-            pages = self.pages.allocate(st.rid, need)
-            if not pages:
+            if not self._attach_prefix(st):
                 # the host free estimate was stale: un-admit this slot AND
                 # every later one (reversed, so the queue keeps its order)
                 # — a slot left running without pages would prefill into
@@ -539,8 +704,23 @@ class ServingEngine:
                 for back in reversed(admitted[i:]):
                     self.scheduler.defer(back)
                 break
-            self._rids = self._rids.at[st.row].set(st.rid)
-            self._bind_pages(st, pages)
+
+    def _publish_prefix(self, st: SlotState) -> None:
+        """A slot just finished paging its prompt: offer its pages to the
+        prefix index.  Only pages the slot OWNS convert (its shared-ref
+        lanes are already published; the copy-on-write lane re-publishes
+        only if the original entry was evicted meanwhile); converted pages
+        move from the slot's private set to its ref list, so teardown
+        releases them instead of reclaiming."""
+        sc = self.sched_cfg
+        kh, kl, ln = st.keys
+        n_keys = int(np.sum(ln > 0))
+        lane_pg = np.full((sc.lanes,), -1, np.int32)
+        for i in range(n_keys):        # key i's page is lane i (the tail
+            lane_pg[i] = st.pages[i]   # key covers lane n_prefix // ps)
+        ins = self.pages.insert_prefix(st.rid, kh, kl, ln, lane_pg)
+        st.shared_refs = st.shared_refs + [
+            int(lane_pg[i]) for i in range(n_keys) if ins[i]]
 
     def _run_prefill(self, plan) -> None:
         """One chunked-prefill tick: right-aligned chunks for up to
@@ -577,6 +757,8 @@ class ServingEngine:
         first_toks = 0
         for i, (st, chunk) in enumerate(zip(plan.slots, plan.chunks)):
             if self.scheduler.on_prefill(st, chunk):
+                if sc.prefix_cache:
+                    self._publish_prefix(st)   # prompt pages fully written
                 tok = int(nxt_h[i])     # final chunk: first generated token
                 first_toks += 1
                 row = st.row

@@ -22,7 +22,9 @@ Per-request FSM (:class:`SlotState`)::
   Kogan): a hard slot cap (``max_slots`` — the concurrency-restriction
   watermark on the readers hitting the lease fast path every step) and a
   KV-page watermark (``admit_free_frac`` — a request is only admitted if
-  its pages fit without pushing the pool below the floor).
+  its pages fit without pushing the pool below the floor).  With the
+  prefix cache on, the engine's ``need_fn`` charges a request only the
+  pages its prompt does NOT share with the pool's prefix index (PR 5).
 * **Chunked prefill** interleaves with decode: each prefill tick processes
   at most ``prefill_rows`` requests and ``token_budget`` prompt tokens,
   cut into right-aligned chunks of ``prefill_chunk``; between prefill
@@ -77,6 +79,12 @@ class SlotState:
     evictions: int = 0
     seq: int = -1                       # admission order (victim choice)
     request: Any = None                 # engine Request (opaque here)
+    # ---- prefix-cache state (engine-owned; policy only reads cached_pos)
+    keys: Any = None                    # chained page keys (kh, kl, lens)
+    cache_plan: Any = None              # (pool version, cov, k_ref, cow,
+    #                                     need) from the admission peek
+    cached_pos: int = 0                 # prompt tokens served from cache
+    shared_refs: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def n_prefix(self) -> int:
@@ -101,6 +109,8 @@ class SchedulerConfig:
     token_budget: int = 64        # prompt tokens per prefill tick
     admit_free_frac: float = 0.0  # admission floor: keep this fraction free
     decode_ticks_per_prefill: int = 1   # interleave ratio
+    prefix_cache: bool = True     # dedup shared prompt prefixes over the
+    #                               pool's device-side page index (PR 5)
 
     @property
     def lanes(self) -> int:
@@ -144,16 +154,20 @@ class Scheduler:
         st.phase = Phase.WAITING
         self.waiting.append(st)
 
-    def admit(self, free_pages: int) -> List[SlotState]:
+    def admit(self, free_pages: int, need_fn=None) -> List[SlotState]:
         """Admission control: move WAITING slots to PREFILL while a batch
         row is free and the slot's pages fit above the admission watermark.
-        The caller allocates the returned slots' pages (and calls
-        :meth:`defer` on any whose allocation fails after all)."""
+        ``need_fn(st)`` overrides the page charge — the engine passes the
+        post-dedup estimate, so a request is charged only the pages its
+        prompt does NOT share with the prefix cache.  The caller allocates
+        the returned slots' pages (and calls :meth:`defer` on any whose
+        allocation fails after all)."""
         floor = self.cfg.admit_free_frac * self.n_pages
         admitted: List[SlotState] = []
         while self.waiting and self._free_rows:
             st = self.waiting[0]
-            need = self.cfg.pages_for(st.n_prefix + 1)
+            need = (need_fn(st) if need_fn is not None
+                    else self.cfg.pages_for(st.n_prefix + 1))
             if free_pages - need < floor:
                 break
             self.waiting.popleft()
@@ -170,8 +184,11 @@ class Scheduler:
 
     def defer(self, st: SlotState) -> None:
         """Undo an admission whose page allocation failed: back to the head
-        of the queue (oldest work keeps priority)."""
+        of the queue (oldest work keeps priority).  The engine released any
+        prefix refs it took; the plan is re-peeked at the next attempt."""
         self._release_row(st)
+        st.cache_plan = None
+        st.cached_pos = 0
         st.phase = Phase.WAITING
         self.waiting.appendleft(st)
 
@@ -264,6 +281,8 @@ class Scheduler:
                 [st.prefix, np.asarray(st.out, st.prefix.dtype)])
         st.prefill_pos = st.pos = 0
         st.pages = []
+        st.keys = st.cache_plan = None   # prefix grew: keys are stale (the
+        st.cached_pos = 0                # engine released the refs already)
         st.phase = Phase.EVICTED     # queued for re-admission; admit()
         st.evictions += 1            # moves it (back) to PREFILL
         self.evictions += 1

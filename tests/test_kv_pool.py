@@ -180,3 +180,54 @@ def test_read_batch_leases_block_stripe_writer_until_done():
         t.start()
         assert done.wait(30.0)
     assert pool.free_count() == 16
+
+
+def test_preempted_sharer_never_frees_survivor_pages():
+    """THE refcount regression (PR 5): request B shares prefix pages with
+    survivor A; preempting B (release refs + reclaim privates) and then
+    compacting must leave every page A can still read — a shared page is
+    freed only at refcount zero, and the orphan scrub treats refcount > 0
+    pages as live no matter which rids are in ``live``."""
+    import jax.numpy as jnp
+
+    from repro.serving.kv_pool import page_keys
+    from repro.core import LiveMem, LockEnv
+
+    env = LockEnv(LiveMem())
+    pool = make_pool(16, stripes=2)
+    pt = PageTable(16, env.make("bravo-ba"), pool=pool)
+    ps = 4
+    prompt = np.arange(1, 9, dtype=np.int32)           # 2 full pages
+    kh, kl, ln = page_keys(prompt, ps, pad_to=3)
+
+    # A prefills and publishes its prompt pages (shared, refcount 1)
+    a_pages = pt.allocate(100, 2)
+    lane_pg = np.asarray(a_pages + [-1], np.int32)
+    ins = pt.insert_prefix(100, kh, kl, ln, lane_pg)
+    assert ins[:2] == [True, True]
+
+    # B rides the same prefix by reference (refcount 2)
+    take = np.asarray([True, True, False])
+    b_refs, revived = pt.acquire_prefix(kh, kl, ln, take)
+    assert b_refs[:2] == a_pages and revived == 0
+    b_own = pt.allocate(101, 1)                        # B's decode page
+    assert (np.asarray(pool.owner)[a_pages] == -3).all()
+
+    # B is PREEMPTED: refs dropped, privates reclaimed
+    assert pt.release_refs(np.asarray(b_refs[:2], np.int32)) == 0
+    assert pt.reclaim(101) == 1
+    assert (np.asarray(pool.owner)[a_pages] == -2).all()
+
+    # a leaked private orphan, to prove compact still scrubs real garbage
+    pt.allocate(77, 1)
+    scrubbed = pt.compact(live=[100])
+    assert scrubbed == 1                               # the rid-77 orphan
+    owner = np.asarray(pool.owner)
+    assert (owner[a_pages] == -2).all(), "survivor's shared pages freed!"
+    assert pool.match_prefix(kh, kl, ln)[1] == 2       # still served
+
+    # survivor drains: refcounts balance to zero, pages become cached-free
+    assert pt.release_refs(np.asarray(a_pages, np.int32)) == 2
+    assert pt.reclaim(100) == 0
+    assert pool.free_count() == 16
+    assert pool.match_prefix(kh, kl, ln)[1] == 2       # cached until reuse

@@ -444,3 +444,50 @@ def test_sharded_revoke_clears_only_owning_lane():
     assert int(cnt) == 2                      # bystander leases not counted
     assert rbias[noisy.idx] == 0
     assert rbias[bystander.idx] == 1
+
+
+def test_registry_revoke_routes_through_sharded_collective():
+    """The ROADMAP follow-up wired: with a live mesh configured on the
+    registry, ``revoke`` itself runs the sharded collective — the bias
+    lane clears on its owning shard, bystander lanes stay armed, a live
+    lease still gates the drain, and the lock rearms afterwards — on the
+    2D ("pod", "data") fake-device axis layout."""
+    import jax
+    from jax.sharding import Mesh
+
+    reg = BravoRegistry(slots=SLOTS)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("pod", "data"))
+    reg.configure_mesh(mesh, axis=("pod", "data"))
+    noisy, bystander = reg.alloc("noisy"), reg.alloc("bystander")
+    rids = jnp.asarray(pick_readers([noisy.lock_id], 3), jnp.int32)
+    g = np.asarray(noisy.acquire(rids))
+    assert g.all()
+
+    done = threading.Event()
+
+    def writer():
+        noisy.revoke(max_wait_s=30.0)
+        done.set()
+
+    t = threading.Thread(target=writer, daemon=True)
+    t.start()
+    deadline = time.monotonic() + 10.0
+    while not reg._revoking[noisy.idx]:        # the sharded clear landed
+        assert time.monotonic() < deadline
+        time.sleep(0.001)
+    assert not done.wait(0.05), "drain finished against live leases"
+    rb = np.asarray(reg.rbias)
+    assert rb[noisy.idx] == 0                  # cleared via the collective
+    assert rb[bystander.idx] == 1              # bystander lane untouched
+    noisy.release(rids, granted=jnp.asarray(g))
+    assert done.wait(30.0)
+    assert reg.revocations[noisy.idx] == 1
+    # inhibit window measured as usual; collapse it and the lock rearms
+    reg.inhibit_until_ns[noisy.idx] = 0
+    assert noisy.rearm()
+    g2 = np.asarray(noisy.acquire(rids))
+    assert g2.all()
+    noisy.release(rids, granted=jnp.asarray(g2))
+    # dropping the mesh restores the host-path revoke
+    reg.configure_mesh(None)
+    assert noisy.revoke() >= 1
