@@ -172,10 +172,10 @@ def bench_aliasing(batch: int) -> dict:
     # jit-level donation as accelerators get it: device_bravo only requests
     # donation on non-CPU backends (CPU ignores it), so lower an explicitly
     # donating jit here to inspect the aliasing the TPU path compiles with
+    from repro.analysis.lint_hlo import has_donation
     lowered = jax.jit(DB._acquire_ids32_impl, donate_argnums=(0, 1)).lower(
         *args).as_text()
-    donated = "tf.aliasing_output" in lowered or \
-        "jax.buffer_donor" in lowered
+    donated = has_donation(lowered)
     check(pallas_alias, "fused acquire: pallas input_output_aliases {0: 0}")
     check(donated, "fused acquire: jit-level table buffer donation")
     return {"pallas_input_output_aliases": pallas_alias,

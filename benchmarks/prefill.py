@@ -114,26 +114,31 @@ def bench_correctness() -> dict:
 
 
 def bench_materialization() -> dict:
-    """The streaming claim, checked against the LOWERED programs: the
-    dense formulation's HLO holds a (B, lanes * ps, KVH, hd) gathered KV
-    buffer; the streamed kernel's HLO must not."""
+    """The streaming claim, checked against the LOWERED programs via the
+    shared ``analysis.lint_hlo`` shape finder: the dense formulation's HLO
+    holds a (B, lanes * ps, KVH, hd) gathered KV buffer; the streamed
+    kernel's HLO must not."""
+    from repro.analysis import lint_hlo as L
     rng = np.random.default_rng(1)
     q, kp, vp, pi, cl, nl = _chunk_case(rng)
     b, lanes = pi.shape
     _, ps, kvh, hd = kp.shape
-    dense_shape = f"{b}x{lanes * ps}x{kvh}x{hd}"   # StableHLO tensor shape
+    dense_kv = (b, lanes * ps, kvh, hd)
     dense_hlo = jax.jit(R.paged_chunk_dense_ref).lower(
         q, kp, vp, pi, cl, nl).as_text()
     streamed_hlo = jax.jit(K.paged_chunk_attention).lower(
         q, kp, vp, pi, cl, nl).as_text()
-    check(dense_shape in dense_hlo,
-          f"dense path materializes a {dense_shape} KV buffer (sanity)")
-    check(dense_shape not in streamed_hlo,
-          f"streamed path lowers WITHOUT any {dense_shape} buffer")
-    return {"dense_buffer": dense_shape,
+    check(L.find_shape(dense_hlo, dense_kv),
+          f"dense path materializes a {dense_kv} KV buffer (sanity)")
+    findings = L.lint_step("paged_chunk_attention", streamed_hlo,
+                           forbid_shapes=[dense_kv])
+    check(not findings,
+          f"streamed path lowers WITHOUT any {dense_kv} buffer "
+          + "; ".join(str(f) for f in findings))
+    return {"dense_buffer": "x".join(map(str, dense_kv)),
             "dense_hlo_bytes": len(dense_hlo),
             "streamed_hlo_bytes": len(streamed_hlo),
-            "streamed_materializes_dense_kv": dense_shape in streamed_hlo}
+            "streamed_materializes_dense_kv": bool(findings)}
 
 
 def bench_transfers() -> dict:

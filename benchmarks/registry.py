@@ -113,10 +113,10 @@ def bench_aliasing() -> dict:
     jaxpr = str(jax.make_jaxpr(REG._acquire_impl)(*args))
     pallas_alias = "input_output_aliases" in jaxpr and \
         "(0, 0)" in jaxpr.split("input_output_aliases", 1)[1][:40]
+    from repro.analysis.lint_hlo import has_donation
     lowered = jax.jit(REG._acquire_impl, donate_argnums=(0,)).lower(
         *args).as_text()
-    donated = "tf.aliasing_output" in lowered or \
-        "jax.buffer_donor" in lowered
+    donated = has_donation(lowered)
     check(pallas_alias, "registry acquire: pallas input_output_aliases {0:0}")
     check(donated, "registry acquire: jit-level table buffer donation")
     return {"pallas_input_output_aliases": pallas_alias,

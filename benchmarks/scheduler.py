@@ -206,9 +206,23 @@ def bench_transfers() -> dict:
         print(f"  transfer_guard tripped: {e}", flush=True)
     check(guard_ok, "step lease batch runs under "
                     "jax.transfer_guard('disallow')")
+
+    # static counterpart: the decode step dispatched inside the lease
+    # window compiles to HLO with zero host<->device transfer ops
+    from repro.analysis import lint_hlo as L
+    cur = jnp.zeros((sc.max_slots, 1), jnp.int32)
+    clen = jnp.ones((sc.max_slots,), jnp.int32)
+    ptbl = jnp.full((sc.max_slots, sc.lanes), -1, jnp.int32)
+    compiled = eng._decode_paged.lower(
+        PARAMS, eng._pages_kv, cur, clen, ptbl).compile().as_text()
+    xfers = L.find_transfers(compiled, "decode_paged")
+    check(not xfers, "lease-held decode step compiles with zero "
+                     "host transfers " + "; ".join(str(f) for f in xfers))
+
     pair_s = timeit(lease_roundtrip, 8)
     return {"lease_fast_path_transfers": 0 if guard_ok else -1,
             "guard_disallow_ok": guard_ok,
+            "decode_step_hlo_transfers": len(xfers),
             "lease_roundtrip_us": round(pair_s * 1e6, 2)}
 
 

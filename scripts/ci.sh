@@ -1,14 +1,40 @@
 #!/usr/bin/env bash
-# CI entry point: fail fast on import-time breakage, then run the tier-1
-# suite and the lock smoke.  Usage: scripts/ci.sh [extra pytest args...]
+# CI entry point: fail fast on import-time breakage, then run the static
+# analysis layer, the tier-1 suite and the lock smoke.
+# Usage: scripts/ci.sh [--lint] [extra pytest args...]
+#   --lint   run ONLY the static-analysis stage (analysis.check + ruff)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+run_lint() {
+  # protocol checker + source lint + lowered-step lint; violations print
+  # a minimal replayable schedule trace and fail the build.  Waivers live
+  # in src/repro/analysis/lint_allowlist.txt
+  python -m repro.analysis.check
+
+  # style lint, gated on availability (the CI image may not ship ruff;
+  # config is checked in at ruff.toml so local runs match CI)
+  if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks scripts
+  else
+    echo "ruff not installed; skipping style lint (config: ruff.toml)"
+  fi
+}
+
+if [[ "${1:-}" == "--lint" ]]; then
+  run_lint
+  exit 0
+fi
+
 # collection must be clean: 6/9 test modules once failed at import because
 # repro.dist was missing — catch that class of regression first and cheaply
 python -m pytest -q --collect-only >/dev/null
+
+# static analysis: AST layering rules, HLO lint over every jitted serving
+# step, and bounded model checking of the BRAVO/registry/KV-pool protocols
+run_lint
 
 # tier-1 verify (ROADMAP.md)
 python -m pytest -x -q "$@"

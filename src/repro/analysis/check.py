@@ -1,0 +1,163 @@
+"""CI entry point for the static-analysis layer: ``python -m
+repro.analysis.check``.
+
+Runs, in order:
+
+1. **Source lint** (:mod:`.lint_src`) — AST layering rules over
+   ``src/repro``, filtered through ``analysis/lint_allowlist.txt``
+   (``rule path-substring message-substring`` per line).
+2. **Lowered-step lint** (:mod:`.lint_hlo`) — lowers + compiles every
+   jitted serving step at the smoke config and checks zero host
+   transfers, no dense-KV materialization on paged steps, and donation
+   aliasing.  Skipped (with a notice) if jax is unavailable.
+3. **Protocol checker** (:mod:`.checker` over :mod:`.scenarios`) —
+   bounded systematic exploration of the BRAVO / registry / KV-pool
+   scenarios; any interleaving that breaks a declared invariant fails
+   the run with a minimal replayable schedule trace.
+
+Exit status 0 = clean; 1 = findings/violations.  ``--mutation NAME``
+inverts stage 3 for one seeded bug: the run fails unless the checker
+*finds* the planted violation and its minimized schedule replays.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+from . import scenarios as S
+from .checker import Explorer, format_trace
+from .lint_src import apply_allowlist, lint_tree, load_allowlist
+
+ALLOWLIST = os.path.join(os.path.dirname(__file__), "lint_allowlist.txt")
+
+
+def run_src_lint(verbose: bool) -> int:
+    findings = apply_allowlist(lint_tree(), load_allowlist(ALLOWLIST))
+    for f in findings:
+        print(f"  FAIL {f}")
+    if verbose and not findings:
+        print("  source lint clean")
+    return len(findings)
+
+
+def run_hlo_lint(verbose: bool) -> int:
+    try:
+        import jax  # noqa: F401
+    except Exception as e:  # pragma: no cover - jax is baked into the image
+        print(f"  SKIP lowered-step lint (jax unavailable: {e})")
+        return 0
+    from .lint_hlo import lint_step, serving_steps
+    n = 0
+    for name, kw in serving_steps().items():
+        findings = lint_step(name, **kw)
+        for f in findings:
+            print(f"  FAIL {f}")
+        n += len(findings)
+        if verbose and not findings:
+            print(f"  step {name}: clean")
+    return n
+
+
+def run_checker(names, max_schedules, seed, mutation, verbose) -> int:
+    failures = 0
+    for name in names:
+        sc = S.SCENARIOS[name]
+        ex = Explorer(lambda mem: sc.build(mem, mutation), name=name,
+                      max_schedules=max_schedules or sc.max_schedules,
+                      max_steps=sc.max_steps, seed=seed)
+        t0 = time.time()
+        res = ex.explore()
+        dt = time.time() - t0
+        status = "complete" if res.complete else "bounded"
+        if res.violation is None:
+            if mutation:
+                print(f"  FAIL {name}: planted mutation '{mutation}' NOT "
+                      f"found in {res.schedules} schedules ({status})")
+                failures += 1
+            elif verbose:
+                print(f"  {name}: no violation in {res.schedules} schedules "
+                      f"({status}, {dt:.1f}s)")
+            continue
+        v = ex.minimize(res.violation)
+        replayed = ex.replay(v.schedule)
+        ok_replay = (replayed is not None
+                     and replayed.invariant == v.invariant)
+        if mutation:
+            if ok_replay:
+                print(f"  {name}: mutation '{mutation}' -> "
+                      f"{v.invariant} after {res.schedules} schedules; "
+                      f"minimal schedule ({len(v.schedule)} choices) "
+                      f"replays ({dt:.1f}s)")
+                if verbose:
+                    print(format_trace(v))
+            else:
+                print(f"  FAIL {name}: found {v.invariant} but minimized "
+                      f"schedule does not replay")
+                failures += 1
+        else:
+            print(f"  FAIL {name}: {v.invariant} after {res.schedules} "
+                  f"schedules (replay={'ok' if ok_replay else 'BROKEN'})")
+            print(format_trace(v))
+            failures += 1
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="protocol checker + source/lowered-step lints")
+    ap.add_argument("--skip-src", action="store_true")
+    ap.add_argument("--skip-hlo", action="store_true")
+    ap.add_argument("--skip-checker", action="store_true")
+    ap.add_argument("--scenario", action="append", default=None,
+                    metavar="NAME", help="run only this checker scenario "
+                    "(repeatable); default: all")
+    ap.add_argument("--max-schedules", type=int, default=None,
+                    help="override per-scenario schedule budget")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="shuffle DFS branch order (0 = deterministic "
+                    "run-to-completion-first)")
+    ap.add_argument("--mutation", choices=sorted(S.MUTATIONS),
+                    help="enable one seeded bug and require the checker "
+                    "to find it (runs only that mutation's scenario)")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    if not args.skip_src:
+        print("[1/3] source lint (src/repro)")
+        failures += run_src_lint(args.verbose)
+    else:
+        print("[1/3] source lint skipped")
+
+    if not args.skip_hlo:
+        print("[2/3] lowered-step lint (serving steps @ smoke config)")
+        failures += run_hlo_lint(args.verbose)
+    else:
+        print("[2/3] lowered-step lint skipped")
+
+    if not args.skip_checker:
+        if args.mutation:
+            names = [S.MUTATIONS[args.mutation]]
+        else:
+            names = args.scenario or list(S.SCENARIOS)
+        unknown = [n for n in names if n not in S.SCENARIOS]
+        if unknown:
+            ap.error(f"unknown scenario(s): {unknown}; "
+                     f"have {sorted(S.SCENARIOS)}")
+        print(f"[3/3] protocol checker ({', '.join(names)})")
+        failures += run_checker(names, args.max_schedules, args.seed,
+                                args.mutation, args.verbose)
+    else:
+        print("[3/3] protocol checker skipped")
+
+    print("analysis: " + ("OK" if failures == 0
+                          else f"{failures} failure(s)"))
+    return 0 if failures == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,6 +32,17 @@ _DTYPE_BYTES = {
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
+# host<->device transfer instructions (infeed/outfeed = host loops feeding
+# the device; send/recv = cross-program transfers; copy-start/-done =
+# cross-memory-space async copies, e.g. HBM <-> host offload)
+_TRANSFER_OPS = {"infeed", "outfeed", "send", "recv", "send-done",
+                 "recv-done", "copy-start", "copy-done"}
+# custom-call targets that re-enter the host: python callbacks
+# (jax.pure_callback / io_callback lower to *_python_*callback*) and
+# explicit host-memory movers
+_TRANSFER_TARGET_RE = re.compile(r"callback|host_transfer|MoveToHost|"
+                                 r"MoveToDevice", re.IGNORECASE)
+_CC_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
 _NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
 _OP_RE = re.compile(r"(?:^|\s)([\w\-]+)\(")
 _COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|\{)")
@@ -69,6 +80,9 @@ class CompStats:
     traffic_bytes: int = 0
     whiles: List[Tuple[str, str]] = field(default_factory=list)
     max_const: int = 0
+    # host<->device transfers: kind -> count (kind is the op name, or
+    # "custom-call:<target>" for host-callback custom calls)
+    transfers: Dict[str, int] = field(default_factory=dict)
 
 
 @dataclass
@@ -77,6 +91,11 @@ class HloReport:
     total_collective_bytes: int
     dot_flops: int
     traffic_bytes: int
+    transfers: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_transfers(self) -> int:
+        return sum(self.transfers.values())
 
 
 _SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
@@ -184,6 +203,13 @@ def parse_hlo(text: str) -> HloReport:
                 lm = _SHAPE_RE.search(arg_shapes[1]) if len(arg_shapes) > 1 \
                     else None
             cur_stats.dot_flops += 2 * out_elems * k
+        if op in _TRANSFER_OPS:
+            cur_stats.transfers[op] = cur_stats.transfers.get(op, 0) + 1
+        elif op == "custom-call":
+            tm = _CC_TARGET_RE.search(rest)
+            if tm and _TRANSFER_TARGET_RE.search(tm.group(1)):
+                key = f"custom-call:{tm.group(1)}"
+                cur_stats.transfers[key] = cur_stats.transfers.get(key, 0) + 1
         if op == "while":
             cond = re.search(r"condition=%?([\w.\-]+)", rest)
             body = re.search(r"body=%?([\w.\-]+)", rest)
@@ -193,30 +219,35 @@ def parse_hlo(text: str) -> HloReport:
         if op == "constant" and mc2:
             cur_stats.max_const = max(cur_stats.max_const, int(mc2.group(1)))
 
-    memo: Dict[str, Tuple[Dict[str, int], int, int]] = {}
+    memo: Dict[str, Tuple[Dict[str, int], int, int, Dict[str, int]]] = {}
 
     def total(comp: str, depth=0):
         if comp in memo:
             return memo[comp]
         if depth > 64 or comp not in comps:
-            return ({}, 0, 0)
+            return ({}, 0, 0, {})
         st = comps[comp]
         coll = dict(st.collective_bytes)
         flops = st.dot_flops
         traffic = st.traffic_bytes
+        xfers = dict(st.transfers)
         for cond, body in st.whiles:
             trips = max(comps.get(cond, CompStats()).max_const, 1)
-            bc, bf, bt = total(body, depth + 1)
+            bc, bf, bt, bx = total(body, depth + 1)
             for k, v in bc.items():
                 coll[k] = coll.get(k, 0) + trips * v
             flops += trips * bf
             traffic += trips * bt
-        memo[comp] = (coll, flops, traffic)
+            for k, v in bx.items():
+                xfers[k] = xfers.get(k, 0) + trips * v
+        memo[comp] = (coll, flops, traffic, xfers)
         return memo[comp]
 
     if entry_name is None and comps:
         entry_name = next(iter(comps))
-    coll, flops, traffic = total(entry_name) if entry_name else ({}, 0, 0)
+    coll, flops, traffic, xfers = (total(entry_name) if entry_name
+                                   else ({}, 0, 0, {}))
     return HloReport(collective_bytes=coll,
                      total_collective_bytes=sum(coll.values()),
-                     dot_flops=flops, traffic_bytes=traffic)
+                     dot_flops=flops, traffic_bytes=traffic,
+                     transfers=xfers)

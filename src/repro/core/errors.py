@@ -1,0 +1,23 @@
+"""Typed protocol errors.
+
+Guards on the lock/pool protocols used to be bare ``assert``s (stripped
+under ``python -O``) or anonymous ``RuntimeError``s.  They are now
+:class:`ProtocolError`, which subclasses ``RuntimeError`` so existing
+``except RuntimeError`` handlers and tests keep working, and carries the
+identifying context (lock id, slot, owner value) in the message.
+"""
+
+from __future__ import annotations
+
+__all__ = ["ProtocolError"]
+
+
+class ProtocolError(RuntimeError):
+    """A lock/pool protocol invariant was violated (or would be).
+
+    Raised by :class:`~repro.core.registry.BravoRegistry` and
+    :class:`~repro.serving.kv_pool.KVPool` on handle-lifetime and geometry
+    violations, and by the :mod:`repro.analysis.checker` host models when a
+    modelled transition is illegal.  Unlike an ``assert`` it survives
+    ``python -O``.
+    """

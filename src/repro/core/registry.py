@@ -68,6 +68,7 @@ from ..kernels import ops as K
 from .bravo import DEFAULT_N, adaptive_inhibit
 from .device_bravo import (TABLE_SLOTS, _drain, _lock_limbs,
                            _release_ids32_all_impl, _release_ids32_impl)
+from .errors import ProtocolError
 from .table import next_lock_id
 
 __all__ = ["BravoRegistry", "RegistryHandle", "MAX_LOCKS",
@@ -163,7 +164,11 @@ class BravoRegistry:
     def __init__(self, slots: int = TABLE_SLOTS,
                  max_locks: int = MAX_LOCKS, n: int = DEFAULT_N):
         # the scan/poll kernels stream (BLOCK_ROWS, LANES) tiles
-        assert slots % (K.LANES * 8) == 0, slots
+        if slots % (K.LANES * 8) != 0:
+            raise ProtocolError(
+                f"table slots {slots} must be a multiple of "
+                f"{K.LANES * 8} (the scan/poll kernels stream "
+                f"(BLOCK_ROWS, LANES) tiles)")
         self.max_locks = max_locks
         self.n = n
         self.table = jnp.zeros((slots // K.LANES, K.LANES), jnp.int32)
@@ -210,7 +215,11 @@ class BravoRegistry:
             lanes = 1
             for a in axes:
                 lanes *= mesh.shape[a]
-            assert self.max_locks % lanes == 0, (self.max_locks, lanes)
+            if self.max_locks % lanes != 0:
+                raise ProtocolError(
+                    f"max_locks {self.max_locks} does not divide evenly "
+                    f"over {lanes} mesh shards; each shard must own an "
+                    f"equal run of bias lanes")
             self._mesh = mesh
             self._sharded_revoke = make_sharded_revoke(mesh, axes)
 
@@ -219,7 +228,9 @@ class BravoRegistry:
         """Allocate a lock: a free bias lane + a fresh lock value, armed."""
         with self._mu:
             if not self._free:
-                raise RuntimeError(f"registry full ({self.max_locks} locks)")
+                raise ProtocolError(
+                    f"registry full: all {self.max_locks} bias lanes are "
+                    f"allocated (free() a handle before alloc())")
             idx = self._free.pop()
             val = next_lock_id()
             self.allocs += 1
@@ -270,8 +281,11 @@ class BravoRegistry:
                     self._free.append(idx)
                     return
             if time.monotonic() > deadline:
-                raise RuntimeError(
-                    f"free({h.name}): revocation drain still in flight")
+                raise ProtocolError(
+                    f"free({h.name}): revocation drain still in flight on "
+                    f"lane {h.idx} (lock value {h.lock_id}); freeing now "
+                    f"would let the lane be recycled while readers are "
+                    f"still being waited out")
             time.sleep(0.0005)
 
     @staticmethod
@@ -282,7 +296,10 @@ class BravoRegistry:
         # revoke), and a release would blindly zero whatever slots it
         # hashes to — possibly a live lease of the lane's next tenant
         if h.closed:
-            raise RuntimeError(f"{h.name}: handle used after free()")
+            raise ProtocolError(
+                f"{h.name}: handle used after free() (lane {h.idx}, dead "
+                f"lock value {h.lock_id}); the lane may already belong to "
+                f"a new lock")
 
     # -------------------------------------------------------------- readers
     def acquire(self, h: "RegistryHandle", reader_ids: jax.Array) -> jax.Array:
@@ -452,7 +469,10 @@ def make_sharded_revoke(mesh, axis=("pod", "data")):
 
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
     missing = [a for a in axes if a not in mesh.axis_names]
-    assert not missing, f"mesh {mesh.axis_names} lacks axes {missing}"
+    if missing:
+        raise ProtocolError(
+            f"mesh {mesh.axis_names} lacks axes {missing} required for "
+            f"the sharded revoke")
 
     def body(table_shard, rbias_shard, lidx, lid):
         lanes = rbias_shard.shape[0]

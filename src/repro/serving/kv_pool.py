@@ -98,6 +98,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.errors import ProtocolError
 from ..core.registry import BravoRegistry
 from ..kernels.hash import _K1, _K2, _K3
 
@@ -379,7 +380,9 @@ class KVPool:
 
     def __init__(self, n_pages: int, registry: Optional[BravoRegistry] = None,
                  stripes: int = 4, map_slots: int = 0):
-        assert stripes >= 1
+        if stripes < 1:
+            raise ProtocolError(
+                f"KVPool needs at least one lock stripe, got {stripes}")
         self.n_pages = n_pages
         self.registry = registry if registry is not None else BravoRegistry()
         self.stripes = stripes
@@ -392,7 +395,10 @@ class KVPool:
             map_slots = 1
             while map_slots < 2 * n_pages:
                 map_slots *= 2
-        assert map_slots & (map_slots - 1) == 0, map_slots
+        if map_slots & (map_slots - 1) != 0:
+            raise ProtocolError(
+                f"map_slots {map_slots} must be a power of two (the "
+                f"prefix index masks hashes with map_slots - 1)")
         self.map_slots = map_slots
         self._map_kh = jnp.zeros((map_slots,), jnp.int32)
         self._map_kl = jnp.zeros((map_slots,), jnp.int32)

@@ -1,0 +1,141 @@
+"""Protocol checker: exploration machinery + scenario invariants.
+
+Covers the three acceptance properties of the analysis layer:
+* clean HEAD — no scenario violates its invariants within the budget;
+* each seeded mutation is found in < 10k schedules with a minimized
+  schedule that replays to the SAME invariant;
+* scenario thread programs also run under SimMem (the build contract is
+  backend-agnostic, so the checker models the code the simulator runs).
+"""
+
+import pytest
+
+from repro.analysis import scenarios as S
+from repro.analysis.checker import (CheckMem, Explorer, InvariantViolation,
+                                    format_trace)
+from repro.core.sim import SimMem, Topology
+
+
+def _explore(name, mutation=None, max_schedules=None, seed=0):
+    sc = S.SCENARIOS[name]
+    ex = Explorer(lambda mem: sc.build(mem, mutation), name=name,
+                  max_schedules=max_schedules or sc.max_schedules,
+                  max_steps=sc.max_steps, seed=seed)
+    return ex, ex.explore()
+
+
+# ---------------------------------------------------------------------------
+# machinery
+# ---------------------------------------------------------------------------
+
+
+def test_checkmem_is_deterministic():
+    def trace(seed):
+        sc = S.SCENARIOS["bravo-rw"]
+        ex, res = _explore("bravo-rw", max_schedules=50, seed=seed)
+        return res.schedules, res.complete
+
+    assert trace(0) == trace(0)
+    assert trace(3) == trace(3)
+
+
+def test_checkmem_counts_steps_and_events():
+    mem = CheckMem()
+    c = mem.alloc("x", 0)
+    done = []
+
+    def t0():
+        c.fetch_add(1)
+        done.append(mem.now())
+
+    mem.run_threads([t0])
+    assert mem.peek(c) == 1
+    assert mem.events, "events recorded"
+    assert done[0] > 0
+
+
+def test_invariant_violation_reported_with_trace():
+    mem = CheckMem()
+    c = mem.alloc("flag", 0)
+
+    def on_step(ev):
+        if ev.kind == "store" and ev.value == 7:
+            raise InvariantViolation("no-sevens", "stored 7")
+
+    mem.on_step = on_step
+    mem.run_threads([lambda: c.store(7)])
+    assert mem.violation is not None
+    assert mem.violation.invariant == "no-sevens"
+    assert "no-sevens" in format_trace(mem.violation)
+
+
+def test_deadlock_detected():
+    def build(mem):
+        a = mem.alloc("a", 0)
+
+        def t0():
+            mem.wait_while(a, lambda v: v == 0)   # nobody ever stores
+
+        from types import SimpleNamespace
+        return SimpleNamespace(threads=[t0], check=None, at_end=None)
+
+    ex = Explorer(build, name="deadlock", max_schedules=10)
+    res = ex.explore()
+    assert res.violation is not None
+    assert res.violation.invariant == "deadlock"
+
+
+# ---------------------------------------------------------------------------
+# clean scenarios — HEAD upholds its invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,budget", [
+    ("bravo-rw", None),          # fully explored (~900 schedules)
+    ("bravo-2r1w", 1500),
+    ("registry-model", 1500),
+    ("kvpool-model", 1500),
+])
+def test_clean_scenarios_no_violation(name, budget):
+    ex, res = _explore(name, max_schedules=budget)
+    assert res.violation is None, format_trace(res.violation)
+    if name == "bravo-rw":
+        assert res.complete, "2-thread 1-iter scenario should be exhausted"
+
+
+# ---------------------------------------------------------------------------
+# seeded mutations — the checker finds each, and the trace replays
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mutation,expect_invariant", [
+    ("release-token-mismatch", "reader-count-underflow"),
+    ("drain-off-by-one", "writer-exclusion-after-drain"),
+    ("cow-write-through", "cow-write-through-shared"),
+])
+def test_mutation_found_and_replays(mutation, expect_invariant):
+    name = S.MUTATIONS[mutation]
+    ex, res = _explore(name, mutation=mutation, max_schedules=10_000)
+    assert res.violation is not None, \
+        f"{mutation}: not found within 10k schedules"
+    assert res.schedules < 10_000
+    assert res.violation.invariant == expect_invariant
+    small = ex.minimize(res.violation)
+    assert len(small.schedule) <= len(res.violation.schedule)
+    replayed = ex.replay(small.schedule)
+    assert replayed is not None and replayed.invariant == expect_invariant
+
+
+# ---------------------------------------------------------------------------
+# backend-agnostic build contract: same programs run under SimMem
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(S.SCENARIOS))
+def test_scenarios_run_under_simmem(name):
+    sc = S.SCENARIOS[name]
+    mem = SimMem(sc.n_threads, Topology(2, 2, 2))
+    inst = sc.build(mem, None)
+    mem.run_threads(inst.threads)
+    if inst.at_end is not None:
+        inst.at_end()                      # quiescence invariants hold

@@ -182,3 +182,46 @@ def test_device_acquire_slots_match_host_hashing():
     host_slots = DB.slots_for(13, readers)
     assert (flat[host_slots] == 13).all()
     assert (flat != 0).sum() == len(np.unique(host_slots))
+
+
+# ---------------------------------------------------------------------------
+# Seeded random sweep: randomized geometry, occupancy and collision mix
+# through the pallas bodies (interpret=True) vs the oracle — the fixed
+# parametrizations above pin known shapes; this sweeps the space between
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_kernel_random_sweep(seed):
+    rng = np.random.default_rng(1000 + seed)
+    rows = int(rng.choice([8, 16, 32, 64]))
+    n = int(rng.integers(1, 129))
+    table = np.zeros((rows, 128), np.int32)
+    n_occ = int(rng.integers(0, rows * 8))
+    if n_occ:
+        occ = rng.choice(rows * 128, size=n_occ, replace=False)
+        table.reshape(-1)[occ] = rng.integers(1, 1 << 20, n_occ)
+    # half the sweeps draw from a narrow range to force CAS collisions
+    hi = rows * 128 if rng.integers(0, 2) else max(2, n)
+    slots = rng.integers(0, hi, size=n).astype(np.int32)
+    ids = rng.integers(1, 1 << 20, size=n).astype(np.int32)
+    t = jnp.asarray(table)
+
+    tk, gk = _publish_call(t, jnp.asarray(slots), jnp.asarray(ids),
+                           interpret=True)
+    tr, gr = R.publish_ref(t, jnp.asarray(slots), jnp.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(tk), np.asarray(tr))
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(gr))
+
+    lock = int(rng.integers(0, 1 << 20))
+    mask, count = _scan_call(jnp.asarray(tk), jnp.asarray(lock, jnp.int32),
+                             interpret=True)
+    mref, cref = R.scan_ref(jnp.asarray(tk), lock)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(mref))
+    assert int(count) == int(cref)
+
+    tc = K.clear(jnp.asarray(tk), jnp.asarray(slots))
+    np.testing.assert_array_equal(
+        np.asarray(tc), np.asarray(R.clear_ref(jnp.asarray(tk),
+                                               jnp.asarray(slots))))
+    assert (np.asarray(tc).reshape(-1)[slots] == 0).all()

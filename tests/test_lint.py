@@ -1,0 +1,199 @@
+"""Unit tests for the lint layer: HLO transfer classification, shape
+finding, donation markers, AST source rules, and the allowlist."""
+
+import textwrap
+
+import pytest
+
+from repro.analysis import lint_hlo as LH
+from repro.analysis import lint_src as LS
+from repro.analysis.hlo import parse_hlo
+
+# ---------------------------------------------------------------------------
+# captured-HLO fixtures (shape of real XLA:CPU post-optimization text)
+# ---------------------------------------------------------------------------
+
+HLO_CALLBACK = textwrap.dedent("""\
+    HloModule jit_cb
+
+    ENTRY %main.7 (Arg_0.1: f32[4]) -> f32[4] {
+      %Arg_0.1 = f32[4]{0} parameter(0)
+      %custom-call.2 = (f32[4]{0}) custom-call(f32[4]{0} %Arg_0.1), custom_call_target="xla_python_cpu_callback", api_version=API_VERSION_STATUS_RETURNING
+      ROOT %get-tuple-element.3 = f32[4]{0} get-tuple-element((f32[4]{0}) %custom-call.2), index=0
+    }
+    """)
+
+HLO_OUTFEED_IN_LOOP = textwrap.dedent("""\
+    HloModule jit_loop
+
+    %cond (p.1: (s32[], f32[])) -> pred[] {
+      %p.1 = (s32[], f32[]) parameter(0)
+      %gte.1 = s32[] get-tuple-element((s32[], f32[]) %p.1), index=0
+      %constant.5 = s32[] constant(5)
+      ROOT %lt = pred[] compare(s32[] %gte.1, s32[] %constant.5), direction=LT
+    }
+
+    %body (p.2: (s32[], f32[])) -> (s32[], f32[]) {
+      %p.2 = (s32[], f32[]) parameter(0)
+      %gte.2 = s32[] get-tuple-element((s32[], f32[]) %p.2), index=0
+      %gte.3 = f32[] get-tuple-element((s32[], f32[]) %p.2), index=1
+      %tok = token[] after-all()
+      %outfeed.1 = token[] outfeed(f32[] %gte.3, token[] %tok), outfeed_shape=f32[]
+      %one = s32[] constant(1)
+      %next = s32[] add(s32[] %gte.2, s32[] %one)
+      ROOT %tup = (s32[], f32[]) tuple(s32[] %next, f32[] %gte.3)
+    }
+
+    ENTRY %main.9 (a: s32[], b: f32[]) -> (s32[], f32[]) {
+      %a = s32[] parameter(0)
+      %b = f32[] parameter(1)
+      %init = (s32[], f32[]) tuple(s32[] %a, f32[] %b)
+      ROOT %while.1 = (s32[], f32[]) while((s32[], f32[]) %init), condition=%cond, body=%body
+    }
+    """)
+
+HLO_CLEAN = textwrap.dedent("""\
+    HloModule jit_add
+
+    ENTRY %main.4 (Arg_0.1: f32[8], Arg_1.2: f32[8]) -> f32[8] {
+      %Arg_0.1 = f32[8]{0} parameter(0)
+      %Arg_1.2 = f32[8]{0} parameter(1)
+      ROOT %add.3 = f32[8]{0} add(f32[8]{0} %Arg_0.1, f32[8]{0} %Arg_1.2)
+    }
+    """)
+
+
+def test_transfer_classification_callback():
+    rep = parse_hlo(HLO_CALLBACK)
+    assert rep.transfers == {"custom-call:xla_python_cpu_callback": 1}
+    assert rep.total_transfers == 1
+
+
+def test_transfer_classification_trip_multiplied():
+    rep = parse_hlo(HLO_OUTFEED_IN_LOOP)
+    # outfeed sits in a 5-trip while body
+    assert rep.transfers == {"outfeed": 5}
+
+
+def test_transfer_classification_clean():
+    assert parse_hlo(HLO_CLEAN).transfers == {}
+    assert LH.find_transfers(HLO_CLEAN, "x") == []
+
+
+def test_find_transfers_live_callback():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    import numpy as np
+
+    def cb(a):
+        return jax.pure_callback(
+            lambda v: np.asarray(v) + 1,
+            jax.ShapeDtypeStruct(a.shape, a.dtype), a)
+
+    compiled = jax.jit(cb).lower(jnp.ones((4,), jnp.float32)) \
+        .compile().as_text()
+    findings = LH.find_transfers(compiled, "cb")
+    assert findings and all(f.rule == "host-transfer-in-step"
+                            for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# shape / donation helpers
+# ---------------------------------------------------------------------------
+
+
+def test_find_shape_both_syntaxes():
+    dims = (2, 64, 2, 16)
+    assert LH.find_shape("tensor<2x64x2x16xf32>", dims)
+    assert LH.find_shape("%x = f32[2,64,2,16]{3,2,1,0} copy(...)", dims)
+    # anchored: no match inside longer shapes or different dims
+    assert not LH.find_shape("tensor<12x64x2x16xf32>", dims)
+    assert not LH.find_shape("tensor<2x64x2x16x4xf32>", dims)
+    assert not LH.find_shape("f32[2,64,2,160]", dims)
+
+
+def test_has_donation():
+    assert LH.has_donation('attrs {tf.aliasing_output = 0 : i32}')
+    assert LH.has_donation('jax.buffer_donor = true')
+    assert not LH.has_donation("plain text")
+
+
+def test_lint_step_combines_rules():
+    fs = LH.lint_step("s", "tensor<2x64x2x16xf32>", compiled=HLO_CALLBACK,
+                      forbid_shapes=[(2, 64, 2, 16)],
+                      require_donation=True)
+    assert {f.rule for f in fs} == {"host-transfer-in-step",
+                                    "dense-kv-materialization",
+                                    "missing-donation"}
+
+
+# ---------------------------------------------------------------------------
+# source lint
+# ---------------------------------------------------------------------------
+
+
+def test_src_tree_is_clean():
+    assert LS.apply_allowlist(
+        LS.lint_tree(),
+        LS.load_allowlist(LS.SRC_ROOT + "/analysis/lint_allowlist.txt")) == []
+
+
+def test_shard_map_outside_dist():
+    src = "from jax.experimental.shard_map import shard_map\n"
+    assert [f.rule for f in LS.lint_file("serving/kv_pool.py", src)] == \
+        ["shard-map-outside-dist"]
+    assert LS.lint_file("dist/sharding.py", src) == []
+
+
+def test_host_sync_in_lease_window():
+    src = textwrap.dedent("""\
+        import numpy as np
+        def step(self, tok, ids):
+            try:
+                nxt = self._decode(tok)
+                bad = np.asarray(nxt)
+                nxt.block_until_ready()
+            finally:
+                self.store.done_read_batch(tok, ids)
+            ok = np.asarray(nxt)   # after release: fine
+        """)
+    fs = LS.lint_file("serving/engine.py", src)
+    assert [f.rule for f in fs] == ["host-sync-in-lease-window"] * 2
+    assert {f.where for f in fs} == {"serving/engine.py:5",
+                                     "serving/engine.py:6"}
+    # jnp.asarray inside the window is allowed (async host->device)
+    ok = src.replace("np.asarray(nxt)\n        nxt.block", "jnp.asarray(nxt)\n        nxt.block")
+    # only block_until_ready remains flagged
+    fs2 = LS.lint_file("serving/engine.py",
+                       src.replace("np.asarray", "jnp.asarray"))
+    assert [f.rule for f in fs2] == ["host-sync-in-lease-window"]
+
+
+def test_scheduler_state_mutation():
+    src = textwrap.dedent("""\
+        class E:
+            def __init__(self, sc):
+                self.scheduler = sc          # rebinding: allowed
+            def ok(self):
+                self.scheduler.submit(1)     # method call: allowed
+            def bad(self):
+                self.scheduler.budget += 1
+                self.scheduler.running[0] = None
+                del self.scheduler.queue
+        """)
+    fs = LS.lint_file("serving/engine.py", src)
+    assert [f.rule for f in fs] == ["scheduler-state-mutation"] * 3
+    assert {f.where.split(":")[1] for f in fs} == {"7", "8", "9"}
+
+
+def test_allowlist_waives_narrowly(tmp_path):
+    f = LH.Finding("host-sync-in-lease-window", "serving/engine.py:755",
+                   "np.asarray while a lease is held")
+    other = LH.Finding("scheduler-state-mutation", "serving/engine.py:755",
+                       "assignment")
+    al = tmp_path / "allow.txt"
+    al.write_text("# comment\n"
+                  "host-sync-in-lease-window engine.py:755 np.asarray\n")
+    entries = LS.load_allowlist(str(al))
+    kept = LS.apply_allowlist([f, other], entries)
+    assert kept == [other]

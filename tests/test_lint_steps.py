@@ -1,0 +1,72 @@
+"""Lowered-step lint applied to every jitted serving step (the CI gate
+that the paged serving stack keeps its lowering guarantees: zero host
+transfers inside lease-held steps, no dense-KV materialization on paged
+steps, donation aliasing where the engine declares it)."""
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.analysis import lint_hlo as LH  # noqa: E402
+
+STEP_NAMES = ["prefill", "decode", "decode_paged", "prefill_paged",
+              "copy_page"]
+
+
+@pytest.fixture(scope="module")
+def steps():
+    return LH.serving_steps()
+
+
+def test_all_engine_steps_covered(steps):
+    assert sorted(steps) == sorted(STEP_NAMES)
+
+
+@pytest.mark.parametrize("name", STEP_NAMES)
+def test_step_lints_clean(steps, name):
+    findings = LH.lint_step(name, **steps[name])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+@pytest.mark.parametrize("name", STEP_NAMES)
+def test_step_has_zero_transfers(steps, name):
+    assert LH.find_transfers(steps[name]["compiled"], name) == []
+
+
+@pytest.mark.parametrize("name", ["decode_paged", "prefill_paged"])
+def test_paged_steps_forbid_dense_kv(steps, name):
+    # the forbidden shape is real: it's the dense gather the paged
+    # kernels replace, so it must be declared...
+    assert steps[name]["forbid_shapes"], "paged step declares a dense shape"
+    # ...and absent from the lowering
+    for dims in steps[name]["forbid_shapes"]:
+        assert not LH.find_shape(steps[name]["lowered"], dims)
+
+
+@pytest.mark.parametrize("name", ["decode_paged", "prefill_paged",
+                                  "copy_page"])
+def test_donating_steps_alias(steps, name):
+    assert steps[name]["require_donation"]
+    assert LH.has_donation(steps[name]["lowered"])
+
+
+def test_dense_reference_would_fail_the_lint():
+    """The dense formulation of chunk prefill DOES materialize the
+    gathered KV buffer — proves the dense-kv rule has teeth."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ref as R
+
+    rng = np.random.default_rng(0)
+    b, lanes, ps, kvh, hd, sq = 2, 4, 8, 2, 16, 8
+    q = jnp.asarray(rng.normal(size=(b, sq, 4, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(16, ps, kvh, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(16, ps, kvh, hd)), jnp.float32)
+    pi = jnp.asarray(rng.integers(0, 16, size=(b, lanes)), jnp.int32)
+    cl = jnp.zeros((b,), jnp.int32)
+    nl = jnp.full((b,), sq, jnp.int32)
+    lowered = jax.jit(R.paged_chunk_dense_ref).lower(
+        q, kp, vp, pi, cl, nl).as_text()
+    fs = LH.lint_step("dense_ref", lowered,
+                      forbid_shapes=[(b, lanes * ps, kvh, hd)])
+    assert [f.rule for f in fs] == ["dense-kv-materialization"]

@@ -1,40 +1,36 @@
-"""Hypothesis property tests on the system's invariants.
+"""Property tests on the system's invariants.
 
-The deterministic simulator makes lock schedules reproducible, so hypothesis
-can drive randomized thread programs and check linearization invariants.
+The deterministic simulator makes lock schedules reproducible, so random
+thread programs can drive linearization invariants.  Hypothesis shrinks
+counterexamples when it's installed; this container's image lacks it
+(requirements.txt lists it), so every property also runs as a seeded
+random sweep — the module must never silently skip.
 """
 
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis",
-    reason="property tests need hypothesis (see requirements.txt)")
-from hypothesis import given, settings, strategies as st  # noqa: E402
-
 from repro.core import LockEnv, SimMem, Topology, mix_hash
 from repro.core.table import DEFAULT_TABLE_SIZE
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
 TOPO = Topology(2, 2, 2)
+LOCK_NAMES = ["bravo-ba", "bravo-pthread", "ba", "bravo-cohort-rw"]
 
 
-@st.composite
-def thread_programs(draw):
-    n_threads = draw(st.integers(2, 5))
-    progs = []
-    for _ in range(n_threads):
-        ops = draw(st.lists(
-            st.tuples(st.sampled_from(["r", "w"]), st.integers(1, 30)),
-            min_size=1, max_size=8))
-        progs.append(ops)
-    return progs
+def _random_programs(rng):
+    n_threads = int(rng.integers(2, 6))
+    return [[(("r", "w")[int(rng.integers(0, 2))], int(rng.integers(1, 31)))
+             for _ in range(int(rng.integers(1, 9)))]
+            for _ in range(n_threads)]
 
 
-@settings(max_examples=25, deadline=None)
-@given(progs=thread_programs(),
-       name=st.sampled_from(["bravo-ba", "bravo-pthread", "ba",
-                             "bravo-cohort-rw"]))
-def test_no_reader_writer_overlap(progs, name):
+def _check_no_reader_writer_overlap(progs, name):
     """For ANY schedule: no reader (fast- or slow-path) overlaps a writer,
     writers never overlap writers, and the table drains afterwards."""
     env = LockEnv(SimMem(len(progs), TOPO))
@@ -73,11 +69,7 @@ def test_no_reader_writer_overlap(progs, name):
         assert env.table.scan(lock.lock_id) == []
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.tuples(st.integers(1, 2**31 - 1),
-                          st.integers(0, 2**31 - 1)),
-                min_size=1, max_size=64))
-def test_hash_in_range_and_deterministic(pairs):
+def _check_hash_in_range_and_deterministic(pairs):
     for lock_id, tid in pairs:
         h1 = mix_hash(lock_id, tid) & (DEFAULT_TABLE_SIZE - 1)
         h2 = mix_hash(lock_id, tid) & (DEFAULT_TABLE_SIZE - 1)
@@ -85,16 +77,7 @@ def test_hash_in_range_and_deterministic(pairs):
         assert 0 <= h1 < DEFAULT_TABLE_SIZE
 
 
-def test_hash_spreads_threads():
-    """Readers of the same lock tend to hit different slots (paper §1)."""
-    slots = {mix_hash(12345, t) & (DEFAULT_TABLE_SIZE - 1)
-             for t in range(64)}
-    assert len(slots) > 56  # near-injective for 64 threads over 4096 slots
-
-
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 80))
-def test_kernel_publish_matches_sequential_cas(seed, n):
+def _check_kernel_publish_matches_sequential_cas(seed, n):
     """Batched publish == a sequence of CAS operations (property sweep)."""
     import jax.numpy as jnp
 
@@ -126,32 +109,34 @@ def test_kernel_publish_matches_sequential_cas(seed, n):
     assert np.array_equal(np.asarray(gr), np.array(granted))
 
 
+def test_hash_spreads_threads():
+    """Readers of the same lock tend to hit different slots (paper §1)."""
+    slots = {mix_hash(12345, t) & (DEFAULT_TABLE_SIZE - 1)
+             for t in range(64)}
+    assert len(slots) > 56  # near-injective for 64 threads over 4096 slots
+
+
 # ---------------------------------------------------------------------------
 # Fused/aliased kernels (the device-BRAVO zero-sync fast path) vs ref.py
 # ---------------------------------------------------------------------------
 
 
-@st.composite
-def table_and_requests(draw):
-    rows = draw(st.sampled_from([8, 16, 32]))
-    n = draw(st.integers(1, 96))
-    seed = draw(st.integers(0, 2**31 - 1))
-    rng = np.random.default_rng(seed)
+def _random_table_and_requests(rng):
+    rows = int(rng.choice([8, 16, 32]))
+    n = int(rng.integers(1, 97))
     table = np.zeros((rows, 128), np.int32)
-    n_occ = draw(st.integers(0, 32))
+    n_occ = int(rng.integers(0, 33))
     if n_occ:
         occ = rng.choice(rows * 128, size=n_occ, replace=False)
         table.reshape(-1)[occ] = rng.integers(1, 100, n_occ)
     # bias toward collisions: draw slots from a small range half the time
-    hi = rows * 128 if draw(st.booleans()) else min(rows * 128, n * 2)
+    hi = rows * 128 if rng.integers(0, 2) else min(rows * 128, n * 2)
     slots = rng.integers(0, hi, size=n).astype(np.int32)
     ids = rng.integers(1, 2**31 - 1, size=n).astype(np.int32)
     return table, slots, ids
 
 
-@settings(max_examples=40, deadline=None)
-@given(data=table_and_requests(), rbias=st.booleans())
-def test_fused_publish_matches_ref_random(data, rbias):
+def _check_fused_publish_matches_ref(data, rbias):
     """Fused (aliased, vectorized) publish == sequential-CAS oracle, for
     random tables, colliding slot vectors and ids, under both rbias
     states."""
@@ -175,9 +160,7 @@ def test_fused_publish_matches_ref_random(data, rbias):
         assert not np.asarray(gk).any()
 
 
-@settings(max_examples=40, deadline=None)
-@given(data=table_and_requests())
-def test_fused_clear_matches_ref_random(data):
+def _check_fused_clear_matches_ref(data):
     import jax.numpy as jnp
 
     from repro.kernels import ops as K
@@ -190,9 +173,7 @@ def test_fused_clear_matches_ref_random(data):
     assert (np.asarray(tc).reshape(-1)[slots] == 0).all()
 
 
-@settings(max_examples=40, deadline=None)
-@given(data=table_and_requests(), lock=st.integers(0, 120))
-def test_scan_and_poll_match_ref_random(data, lock):
+def _check_scan_and_poll_match_ref(data, lock):
     import jax.numpy as jnp
 
     from repro.kernels import ops as K
@@ -206,3 +187,91 @@ def test_scan_and_poll_match_ref_random(data, lock):
     poll = int(K.revocation_poll(jnp.asarray(table), lock))
     assert (poll == 0) == (int(cref) == 0)
     assert poll <= int(cref)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def thread_programs(draw):
+        n_threads = draw(st.integers(2, 5))
+        progs = []
+        for _ in range(n_threads):
+            ops = draw(st.lists(
+                st.tuples(st.sampled_from(["r", "w"]), st.integers(1, 30)),
+                min_size=1, max_size=8))
+            progs.append(ops)
+        return progs
+
+    @st.composite
+    def table_and_requests(draw):
+        seed = draw(st.integers(0, 2**31 - 1))
+        return _random_table_and_requests(np.random.default_rng(seed))
+
+    @settings(max_examples=25, deadline=None)
+    @given(progs=thread_programs(), name=st.sampled_from(LOCK_NAMES))
+    def test_no_reader_writer_overlap(progs, name):
+        _check_no_reader_writer_overlap(progs, name)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(st.integers(1, 2**31 - 1),
+                              st.integers(0, 2**31 - 1)),
+                    min_size=1, max_size=64))
+    def test_hash_in_range_and_deterministic(pairs):
+        _check_hash_in_range_and_deterministic(pairs)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 80))
+    def test_kernel_publish_matches_sequential_cas(seed, n):
+        _check_kernel_publish_matches_sequential_cas(seed, n)
+
+    @settings(max_examples=40, deadline=None)
+    @given(data=table_and_requests(), rbias=st.booleans())
+    def test_fused_publish_matches_ref_random(data, rbias):
+        _check_fused_publish_matches_ref(data, rbias)
+
+    @settings(max_examples=40, deadline=None)
+    @given(data=table_and_requests())
+    def test_fused_clear_matches_ref_random(data):
+        _check_fused_clear_matches_ref(data)
+
+    @settings(max_examples=40, deadline=None)
+    @given(data=table_and_requests(), lock=st.integers(0, 120))
+    def test_scan_and_poll_match_ref_random(data, lock):
+        _check_scan_and_poll_match_ref(data, lock)
+else:
+    @pytest.mark.parametrize("name", LOCK_NAMES)
+    @pytest.mark.parametrize("seed", range(4))
+    def test_no_reader_writer_overlap(seed, name):
+        rng = np.random.default_rng(seed)
+        _check_no_reader_writer_overlap(_random_programs(rng), name)
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_hash_in_range_and_deterministic(seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 65))
+        pairs = zip(rng.integers(1, 2**31 - 1, n).tolist(),
+                    rng.integers(0, 2**31 - 1, n).tolist())
+        _check_hash_in_range_and_deterministic(pairs)
+
+    @pytest.mark.parametrize("seed", range(10))
+    def test_kernel_publish_matches_sequential_cas(seed):
+        rng = np.random.default_rng(seed)
+        _check_kernel_publish_matches_sequential_cas(
+            seed, int(rng.integers(1, 81)))
+
+    @pytest.mark.parametrize("rbias", [False, True])
+    @pytest.mark.parametrize("seed", range(8))
+    def test_fused_publish_matches_ref_random(seed, rbias):
+        rng = np.random.default_rng(seed)
+        _check_fused_publish_matches_ref(
+            _random_table_and_requests(rng), rbias)
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_fused_clear_matches_ref_random(seed):
+        rng = np.random.default_rng(seed)
+        _check_fused_clear_matches_ref(_random_table_and_requests(rng))
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_scan_and_poll_match_ref_random(seed):
+        rng = np.random.default_rng(100 + seed)
+        data = _random_table_and_requests(rng)
+        _check_scan_and_poll_match_ref(data, int(rng.integers(0, 121)))
