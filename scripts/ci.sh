@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # CI entry point: fail fast on import-time breakage, then run the static
 # analysis layer, the tier-1 suite and the lock smoke.
-# Usage: scripts/ci.sh [--lint] [extra pytest args...]
+# Usage: scripts/ci.sh [--lint|--chaos] [extra pytest args...]
 #   --lint   run ONLY the static-analysis stage (analysis.check + ruff)
+#   --chaos  run ONLY the fault-injection stage (seeded fault matrix +
+#            the writer-parking checker scenario and its seeded mutation)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -23,8 +25,29 @@ run_lint() {
   fi
 }
 
+run_chaos() {
+  # seeded deterministic fault matrix (repro.ft.faults): delayed/dropped
+  # revocation acks, stalled lease-holding reader, straggler tick, KV-pool
+  # exhaustion mid-prefill, corrupted checkpoint stream, worker-thread
+  # crash.  Every cell must keep tokens bit-exact, drain refcounts to
+  # zero, and leave no stale bias lane.
+  python -m repro.ft.faults --matrix --seed 0
+
+  # writer-parking / bounded-drain protocol: the clean model-checker
+  # scenario plus its seeded mutation (lost park wakeup), both inside the
+  # bounded 10k-schedule budget
+  python -m repro.analysis.check --skip-src --skip-hlo \
+    --scenario parking-model
+  python -m repro.analysis.check --skip-src --skip-hlo \
+    --mutation park-wakeup-lost
+}
+
 if [[ "${1:-}" == "--lint" ]]; then
   run_lint
+  exit 0
+fi
+if [[ "${1:-}" == "--chaos" ]]; then
+  run_chaos
   exit 0
 fi
 
@@ -35,6 +58,11 @@ python -m pytest -q --collect-only >/dev/null
 # static analysis: AST layering rules, HLO lint over every jitted serving
 # step, and bounded model checking of the BRAVO/registry/KV-pool protocols
 run_lint
+
+# fault injection: the seeded chaos matrix + the writer-parking checker
+# scenario/mutation (bounded schedule budget) — wired right after lint so
+# a lost serving guarantee fails the build before the slow benches run
+run_chaos
 
 # tier-1 verify (ROADMAP.md)
 python -m pytest -x -q "$@"
@@ -64,3 +92,10 @@ python -m benchmarks.scheduler --smoke
 # the zero-transfer chunk attention check, and the dedup sweep (>= 2x
 # page-allocation reduction at 90% shared prompts, refcounts drain to 0)
 python -m benchmarks.prefill --smoke
+
+# hot-swap serving smoke: repeated weight swaps under sustained decode
+# traffic (0 dropped requests, tokens == dense reference), checkpoint
+# staging with per-tensor CRC verify (corrupted stream rejected before
+# the epoch swap), and the bounded-drain degradation path (DrainTimeout
+# -> stuck-lane scrub -> retried swap lands, still 0 dropped)
+python -m benchmarks.hotswap --smoke

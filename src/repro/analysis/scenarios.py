@@ -19,8 +19,9 @@ the lock value via :func:`pin_lock_value`, which also guarantees the
 scenario's threads hash to pairwise-distinct slots (a collision would make
 the release-clears-slot invariant ambiguous).
 
-The three ``MUTATIONS`` re-introduce historical bugs behind flags so the
-mutation tests can assert the explorer still catches them:
+The ``MUTATIONS`` re-introduce historical (or designed-against) bugs
+behind flags so the mutation tests can assert the explorer still catches
+them:
 
 * ``release-token-mismatch`` — the PR-1 bug: ``release_read`` routes a
   fast-path token to the underlying lock, leaving the table slot published
@@ -29,6 +30,9 @@ mutation tests can assert the explorer still catches them:
   writer can enter its critical section while a fast-path reader is live.
 * ``cow-write-through`` — a writer mutates a page whose owner word says
   shared (refcount >= 1) instead of copy-on-write diverging.
+* ``park-wakeup-lost`` — the PR-7 writer-parking hazard: the finishing
+  writer drops the park-word bump + wake, so a writer parked on its drain
+  gate sleeps forever (caught by the built-in deadlock invariant).
 """
 
 from __future__ import annotations
@@ -361,6 +365,173 @@ def build_registry_model(mem: Mem,
 
 
 # ---------------------------------------------------------------------------
+# S3b — writer parking + bounded drain + stuck-lane scrub (PR 7)
+# ---------------------------------------------------------------------------
+
+
+class ParkingModel:
+    """Host model of the registry's PR-7 writer path: bounded drain with a
+    DrainTimeout/scrub escape, and a TWA-style parking word (seq-count
+    futex) where a second writer parks on the first writer's drain.
+
+    The bounded drain is modelled deterministically: each matching slot is
+    polled ONCE after the scan; a slot still publishing counts as a
+    deadline hit (the checker has no wall clock — one failed recheck IS
+    the timeout).  On timeout the lane is scrubbed and the lock value
+    regenerated (``gen`` bumps), and the writer does NOT enter its CS —
+    mirroring the deliberate raise in ``BravoRegistry.revoke``."""
+
+    def __init__(self, mem: Mem, lose_wakeup: bool = False):
+        self.mem = mem
+        self.table = VisibleReadersTable(mem, size=64, name="VR")
+        self.rbias = mem.alloc("park.rbias")
+        self.gate = mem.alloc("park.gate")     # _revoking drain gate
+        self.park = mem.alloc("park.word")     # TWA slot: seq-count futex
+        self.lose_wakeup = lose_wakeup
+        # two generations of the lane's lock value, slot-disjoint so the
+        # stale publish and the rearmed lock are unambiguous cells
+        self.val0 = pin_lock_value(self.table, [0, 1, 2])
+        taken = {mix_hash(self.val0, t) & (self.table.size - 1)
+                 for t in (0, 1, 2)}
+        self.val1 = pin_lock_value(self.table, [0, 1, 2], avoid=taken,
+                                   start=self.val0 + 1)
+        self.cur = self.val0                   # ghost: current lock value
+        self.gen = 0                           # ghost: bumps on scrub
+        mem._vals[self.rbias.index] = 1        # biased steady state
+
+    # -- reader fast path --------------------------------------------------
+    def try_acquire(self) -> Optional[Cell]:
+        val = self.cur
+        if self.rbias.load() == 0:
+            return None
+        slot = self.table.slot_for(val, self.mem.thread_id())
+        if not slot.cas(0, val):
+            return None
+        self.mem.fence()
+        if self.rbias.load():
+            return slot
+        slot.store(0)                          # lost to a revoking writer
+        return None
+
+    # -- writer path -------------------------------------------------------
+    def _park_until_idle(self) -> None:
+        """TWA parking: wait on the seq word while the gate is open.
+        Wakeups are hints — the gate is rechecked after every wake."""
+        while True:
+            seq = self.park.load()
+            if self.gate.load() == 0:
+                return
+            self.mem.futex_wait(self.park, seq)
+
+    def _unpark(self) -> None:
+        if self.lose_wakeup:                   # MUTATION park-wakeup-lost
+            return
+        self.park.fetch_add(1)
+        self.mem.futex_wake(self.park)
+
+    def revoke(self) -> bool:
+        """Bounded drain; True -> drained (caller may enter its CS),
+        False -> deadline hit, lane scrubbed (caller must NOT proceed)."""
+        self._park_until_idle()
+        self.gate.fetch_add(1)
+        try:
+            self.rbias.store(0)
+            self.mem.fence()
+            val = self.cur
+            for i in self.table.scan(val):
+                if peek(self.mem, self.table.cell(i)) != val:
+                    continue                   # cleared between scan & poll
+                if self.table.cell(i).load() == val:   # the bounded poll
+                    self._scrub(val)
+                    return False
+            return True
+        finally:
+            self.gate.fetch_add(-1)
+            self._unpark()
+
+    def _scrub(self, val: int) -> None:
+        """Stuck-lane scrub: zero every slot publishing ``val`` and
+        REGENERATE the lane's lock value, so the wedged publish can never
+        match the rearmed lock."""
+        for i in self.table.scan(val):
+            self.table.cell(i).store(0)
+        self.cur = self.val1
+        self.gen += 1
+
+
+def build_parking_model(mem: Mem, mutation: Optional[str] = None) -> Instance:
+    """Wedged reader (never releases) vs two writers on ONE lock: writer 1
+    hits the bounded-drain deadline and scrubs; writer 2 parks on writer
+    1's drain gate (TWA word, not a table poll), is woken by writer 1's
+    unpark, retries on the REGENERATED value and enters its CS.
+
+    The ``park-wakeup-lost`` mutation drops the unpark (seq bump + wake):
+    writer 2 stays blocked in ``futex_wait`` forever, which the explorer's
+    built-in deadlock invariant reports."""
+    model = ParkingModel(mem, lose_wakeup=(mutation == "park-wakeup-lost"))
+    scratch = mem.alloc("scratch")
+    g = SimpleNamespace(wedged=False, writers_cs=0, timeouts=0)
+
+    def t_stuck_reader():                      # tid 0: wedged forever
+        slot = model.try_acquire()
+        if slot is not None:
+            g.wedged = True                    # holds the lease; no release
+
+    def t_writer1():                           # tid 1
+        if model.revoke():
+            g.writers_cs += 1
+            scratch.load()                     # CS: drain really finished
+            g.writers_cs -= 1
+        else:
+            g.timeouts += 1                    # degraded path: no CS
+
+    def t_writer2():                           # tid 2: parks on writer 1
+        if model.revoke():
+            g.writers_cs += 1
+            scratch.load()
+            g.writers_cs -= 1
+        else:
+            g.timeouts += 1
+
+    def check(ev):
+        # (I11) reader exclusion after a SUCCESSFUL drain: a writer in
+        # its CS never coexists with a slot matching the CURRENT lock
+        # value — a non-wedged reader backed off or released, and the
+        # wedged reader's stale publish is OLD-generation by construction
+        # (that is the whole point of the scrub).  Writer-writer
+        # exclusion is the HOST write lock's job, outside this model:
+        # revoke only drains readers, which is why the gate is a counter.
+        if g.writers_cs:
+            for i in range(model.table.size):
+                if mem._vals[model.table.arr.base + i] == model.cur:
+                    raise InvariantViolation(
+                        "stale-lane-matches-rearmed-lock",
+                        f"slot {i} publishes CURRENT value {model.cur} "
+                        f"while a writer is in its CS")
+        # (I12) the drain gate is a balanced counter.
+        if peek(mem, model.gate) < 0:
+            raise InvariantViolation(
+                "gate-underflow", f"gate = {peek(mem, model.gate)}")
+
+    def at_end():
+        if peek(mem, model.gate) != 0:
+            raise InvariantViolation(
+                "gate-underflow", "gate != 0 at exit")
+        # (I13) post-scrub hygiene: once the value regenerated, no slot
+        # may still publish it-or-the-old-one EXCEPT the wedged reader's
+        # own (pre-scrub grants are gen-skipped, their slots scrubbed).
+        if model.gen:
+            for i in range(model.table.size):
+                if mem._vals[model.table.arr.base + i] == model.cur:
+                    raise InvariantViolation(
+                        "stale-lane-matches-rearmed-lock",
+                        f"slot {i} publishes regenerated value "
+                        f"{model.cur} at exit")
+
+    return Instance([t_stuck_reader, t_writer1, t_writer2], check, at_end)
+
+
+# ---------------------------------------------------------------------------
 # S4 — host model of the KV pool's owner-vector / COW protocol
 # ---------------------------------------------------------------------------
 
@@ -518,6 +689,8 @@ SCENARIOS: Dict[str, Scenario] = {
                            max_schedules=6000),
     "registry-model": Scenario("registry-model", 3, build_registry_model,
                                max_schedules=6000),
+    "parking-model": Scenario("parking-model", 3, build_parking_model,
+                              max_schedules=10000),
     "kvpool-model": Scenario("kvpool-model", 3, build_kvpool_model,
                              max_schedules=6000),
 }
@@ -526,5 +699,6 @@ SCENARIOS: Dict[str, Scenario] = {
 MUTATIONS: Dict[str, str] = {
     "release-token-mismatch": "bravo-rw",
     "drain-off-by-one": "registry-model",
+    "park-wakeup-lost": "parking-model",
     "cow-write-through": "kvpool-model",
 }

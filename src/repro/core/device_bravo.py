@@ -70,6 +70,7 @@ from ..dist.sharding import hierarchical_psum, shard_map_compat
 from ..kernels import hash as H
 from ..kernels import ops as K
 from .bravo import DEFAULT_N, adaptive_inhibit
+from .errors import DrainTimeout
 from .table import mix_hash_vec, next_lock_id
 from .table import mix_hash  # noqa: F401  (re-export: scalar host oracle)
 
@@ -244,7 +245,8 @@ def _drain(dispatch_poll: Callable[[jax.Array], jax.Array], lock_id, *,
     lid = jnp.asarray(lock_id, jnp.int32)
     inflight: collections.deque = collections.deque()
     scans = 0
-    deadline = time.monotonic() + max_wait_s
+    start = time.monotonic()
+    deadline = start + max_wait_s
     while True:
         while len(inflight) < pipeline_depth:
             cnt = dispatch_poll(lid)
@@ -255,7 +257,11 @@ def _drain(dispatch_poll: Callable[[jax.Array], jax.Array], lock_id, *,
             return scans
         if time.monotonic() > deadline:
             held = int(dispatch_poll(lid))
-            raise TimeoutError(f"lease revocation stuck: >={held} held")
+            waited = time.monotonic() - start
+            raise DrainTimeout(
+                f"lease revocation stuck after {waited:.3f}s / {scans} "
+                f"scans: >={held} lease(s) still publish lock {lock_id}",
+                lock_id=int(lock_id), held=held, waited_s=waited)
         time.sleep(wait_poll_s)
 
 

@@ -47,6 +47,33 @@ Avoiding Scalability Collapse (arXiv:1905.10818) motivates arming each
 lock's bias by its own measured revocation cost rather than a fixed
 constant.
 
+Writer parking & bounded drain (TWA-style)
+------------------------------------------
+Writers that must wait for ANOTHER writer's drain on the same lock used to
+spin-poll the drain gate at a hardcoded 0.5 ms period (``free()``) or race
+a second device poll loop against the first (``revoke()``).  Following the
+waiting-array idea of *TWA — Ticket Locks Augmented with a Waiting Array*
+(arXiv:1810.01573), the registry keeps a small shared array of parking
+slots (``PARK_SLOTS`` condition variables) alongside the per-lock
+drain-gate vector: a writer that finds ``_revoking[i]`` nonzero parks on
+slot ``i % PARK_SLOTS`` and is woken when that lock's last in-flight drain
+closes its gate.  Distinct locks may hash to the same slot — like TWA's
+array, a wakeup is a *hint* (waiters recheck their own gate and re-park),
+so collisions cost a spurious wake, never a lost one.
+
+Every drain is deadline-bounded.  On deadline the writer raises the typed
+:class:`~.errors.DrainTimeout` — after first running the **stuck-lane
+scrub**: every table slot still publishing the lock's value is cleared and
+the lane's lock value is REGENERATED (``next_lock_id``), exploiting the
+same per-generation value discipline that makes lane recycling safe.  A
+wedged reader's stale publish (or a delayed re-publish racing the scrub)
+can therefore never match the lock once the caller rearms and retries;
+release of a pre-scrub grant is skipped by generation check (the handle's
+``gen`` bumps with the value).  The raise is deliberate: the wedged reader
+may still be inside its critical section, so the WRITER must not proceed —
+callers degrade (stop admitting, finish in-flight work, retry with
+backoff; see ``ServingEngine.hot_swap``) instead of crashing.
+
 ``RegistryHandle`` implements the same protocol as ``LeaseHandle``
 (``acquire`` / ``release`` / ``revoke`` / ``rearm`` + a ``lock_id``), so
 ``ModelStore`` / ``PageTable`` / ``make_distributed_revoke`` accept either.
@@ -68,13 +95,14 @@ from ..kernels import ops as K
 from .bravo import DEFAULT_N, adaptive_inhibit
 from .device_bravo import (TABLE_SLOTS, _drain, _lock_limbs,
                            _release_ids32_all_impl, _release_ids32_impl)
-from .errors import ProtocolError
+from .errors import DrainTimeout, ProtocolError
 from .table import next_lock_id
 
-__all__ = ["BravoRegistry", "RegistryHandle", "MAX_LOCKS",
+__all__ = ["BravoRegistry", "RegistryHandle", "MAX_LOCKS", "PARK_SLOTS",
            "make_sharded_revoke"]
 
 MAX_LOCKS = 128   # one VPU lane row of bias lanes per registry
+PARK_SLOTS = 16   # TWA-style waiting array: parking slots shared by lanes
 
 
 # ---------------------------------------------------------------------------
@@ -184,6 +212,11 @@ class BravoRegistry:
         self._vals = np.zeros(max_locks, np.int64)   # 0 = lane unallocated
         self._used = np.zeros(max_locks, bool)       # lane ever allocated
         self._free = list(range(max_locks - 1, -1, -1))
+        # TWA-style waiting array: writers queueing behind an in-flight
+        # drain park here (slot = lane % PARK_SLOTS) instead of spinning
+        # on the gate; wakeups are hints, waiters recheck their own gate
+        self._park = [threading.Condition(self._mu)
+                      for _ in range(PARK_SLOTS)]
         # cached device scalars: rearm() is on the reader fast path and
         # must not upload anything (jax.transfer_guard-clean)
         self._one = jnp.ones((), jnp.int32)
@@ -195,6 +228,9 @@ class BravoRegistry:
         self.publishes = 0
         self.allocs = 0
         self.recycles = 0
+        self.parks = 0            # writers that parked on a busy drain
+        self.drain_timeouts = 0   # bounded drains that hit their deadline
+        self.lane_scrubs = 0      # stuck-lane scrubs (value regenerated)
 
     def configure_mesh(self, mesh, axis=("pod", "data")) -> None:
         """Route revocation through :func:`make_sharded_revoke` — the
@@ -251,6 +287,31 @@ class BravoRegistry:
     # DeviceLeaseTable API parity: engine code can treat either as a factory
     handle = alloc
 
+    def _park_until_idle(self, idx: int, deadline: float, who: str) -> None:
+        """Park (TWA waiting array) until lane ``idx``'s drain gate closes.
+
+        Caller holds ``self._mu`` (the conditions share it; ``wait``
+        releases it while parked).  Wakeups are hints — a colliding lane's
+        drain may notify this slot — so the gate is rechecked each wake.
+        Raises :class:`DrainTimeout` at ``deadline``."""
+        park = self._park[idx % PARK_SLOTS]
+        while self._revoking[idx]:
+            self.parks += 1
+            remaining = deadline - time.monotonic()
+            if remaining <= 0 or not park.wait(timeout=remaining):
+                if not self._revoking[idx]:
+                    return        # gate closed exactly at the deadline
+                raise DrainTimeout(
+                    f"{who}: revocation drain still in flight on lane "
+                    f"{idx} (lock value {int(self._vals[idx])}) after "
+                    f"parking past the deadline",
+                    lock_id=int(self._vals[idx]), idx=idx)
+
+    def _wake_parked(self, idx: int) -> None:
+        """Notify lane ``idx``'s parking slot (caller holds ``self._mu``).
+        notify_all, not notify: slot-sharing lanes' waiters must recheck."""
+        self._park[idx % PARK_SLOTS].notify_all()
+
     def free(self, h: "RegistryHandle", wait_s: float = 5.0) -> None:
         """Recycle ``h``'s bias lane.  Does NOT wait for readers: any slot
         still publishing the old value is scrubbed in one donated program,
@@ -258,35 +319,26 @@ class BravoRegistry:
         stale slots can never be resurrected.
 
         It DOES wait (up to ``wait_s``) for an in-flight ``revoke`` drain
-        on this lock: recycling the lane mid-drain would let the drain's
-        bookkeeping (the ``_revoking`` decrement, the inhibit stamp) land
-        on the lane's NEXT tenant."""
+        on this lock — parked on the waiting array, not spinning:
+        recycling the lane mid-drain would let the drain's bookkeeping
+        (the ``_revoking`` decrement, the inhibit stamp) land on the
+        lane's NEXT tenant.  Raises :class:`DrainTimeout` at the cap."""
         deadline = time.monotonic() + wait_s
-        while True:
-            with self._mu:
-                if h.closed:
-                    return
-                if not self._revoking[h.idx]:
-                    h.closed = True
-                    idx = h.idx
-                    i = jnp.asarray(idx, jnp.int32)
-                    self.rbias = _programs().scatter(self.rbias, i,
-                                                     self._zero)
-                    self.lock_vals = _programs().scatter(self.lock_vals, i,
-                                                         self._zero)
-                    self.table = _programs().scrub(
-                        self.table, jnp.asarray(h.lock_id, jnp.int32))
-                    self._vals[idx] = 0
-                    self._armed[idx] = False
-                    self._free.append(idx)
-                    return
-            if time.monotonic() > deadline:
-                raise ProtocolError(
-                    f"free({h.name}): revocation drain still in flight on "
-                    f"lane {h.idx} (lock value {h.lock_id}); freeing now "
-                    f"would let the lane be recycled while readers are "
-                    f"still being waited out")
-            time.sleep(0.0005)
+        with self._mu:
+            if h.closed:
+                return
+            self._park_until_idle(h.idx, deadline, f"free({h.name})")
+            h.closed = True
+            idx = h.idx
+            i = jnp.asarray(idx, jnp.int32)
+            self.rbias = _programs().scatter(self.rbias, i, self._zero)
+            self.lock_vals = _programs().scatter(self.lock_vals, i,
+                                                 self._zero)
+            self.table = _programs().scrub(
+                self.table, jnp.asarray(h.lock_id, jnp.int32))
+            self._vals[idx] = 0
+            self._armed[idx] = False
+            self._free.append(idx)
 
     @staticmethod
     def _check_open(h: "RegistryHandle") -> None:
@@ -359,8 +411,12 @@ class BravoRegistry:
         n = self.n if n is None else n
         idx = h.idx
         sharded = self._sharded_revoke
+        deadline = time.monotonic() + max_wait_s
         with self._mu:
             self._check_open(h)
+            # a second writer (epoch swap racing pool compaction) parks on
+            # the first writer's drain instead of polling the table
+            self._park_until_idle(idx, deadline, f"revoke({h.name})")
             if sharded is not None:
                 self.rbias, _ = sharded(self.table, self.rbias, h)
             else:
@@ -383,9 +439,25 @@ class BravoRegistry:
 
         try:
             start = time.monotonic_ns()
-            scans = _drain(poll_live, h.lock_id, wait_poll_s=wait_poll_s,
-                           max_wait_s=max_wait_s,
-                           pipeline_depth=pipeline_depth)
+            try:
+                scans = _drain(poll_live, h.lock_id,
+                               wait_poll_s=wait_poll_s,
+                               max_wait_s=max_wait_s,
+                               pipeline_depth=pipeline_depth)
+            except DrainTimeout as e:
+                now = time.monotonic_ns()
+                with self._mu:
+                    self.drain_timeouts += 1
+                    self._scrub_stuck_lane(h)
+                    # a timed-out drain is still a (pathological) measured
+                    # revocation cost: stamp the inhibit window so a
+                    # degrade-and-retry loop backs off the rearm too
+                    ewma, window = adaptive_inhibit(
+                        int(self.revoke_ewma_ns[idx]), now - start, n)
+                    self.revoke_ewma_ns[idx] = ewma
+                    self.inhibit_until_ns[idx] = now + window
+                e.idx = idx
+                raise
             now = time.monotonic_ns()
             with self._mu:
                 ewma, window = adaptive_inhibit(
@@ -395,7 +467,32 @@ class BravoRegistry:
         finally:
             with self._mu:
                 self._revoking[idx] -= 1
+                if not self._revoking[idx]:
+                    self._wake_parked(idx)
         return scans
+
+    def _scrub_stuck_lane(self, h: "RegistryHandle") -> None:
+        """Fence off a wedged reader after a drain deadline (mutex held).
+
+        Scrubs every slot still publishing ``h``'s value and REGENERATES
+        the lane's lock value — the per-generation discipline that makes
+        lane recycling safe.  The wedged reader's stale publish can never
+        match the rearmed lock, and its eventual release is gen-skipped by
+        the owner (the handle's ``gen`` bumps with the value).  Does NOT
+        clear the caller's raise: the reader may still be in its critical
+        section, so revoke must still fail and the caller must degrade."""
+        idx = h.idx
+        self.table = _programs().scrub(
+            self.table, jnp.asarray(h.lock_id, jnp.int32))
+        new_val = next_lock_id()
+        self._vals[idx] = new_val
+        self.lock_vals = _programs().scatter(
+            self.lock_vals, h._idx, jnp.asarray(new_val, jnp.int32))
+        h.lock_id = new_val
+        h._lh, h._ll = _lock_limbs(new_val)
+        h._val = jnp.asarray(new_val, jnp.int32)
+        h.gen += 1
+        self.lane_scrubs += 1
 
     def rearm(self, h: "RegistryHandle") -> bool:
         """Re-arm ``h``'s bias iff ITS drain count is zero and ITS inhibit
@@ -438,6 +535,9 @@ class BravoRegistry:
                     "recycles": self.recycles,
                     "publishes": self.publishes,
                     "revocations": int(self.revocations.sum()),
+                    "parks": self.parks,
+                    "drain_timeouts": self.drain_timeouts,
+                    "lane_scrubs": self.lane_scrubs,
                     "armed": int(self._armed.sum()),
                     "rbias_armed": int(jnp.sum(self.rbias))}
 
@@ -513,6 +613,7 @@ class RegistryHandle:
         self.lock_id = lock_id         # value published into table slots
         self.name = name or f"reglock{idx}"
         self.closed = False
+        self.gen = 0                   # bumps on stuck-lane value scrub
         self._lh, self._ll = _lock_limbs(lock_id)
         self._idx = jnp.asarray(idx, jnp.int32)
         self._val = jnp.asarray(lock_id, jnp.int32)

@@ -32,6 +32,22 @@ import numpy as np
 from ..core.factory import LockEnv
 
 
+class CheckpointCorrupt(IOError):
+    """A checkpoint failed per-tensor CRC (or structural) verification.
+
+    Subclasses ``IOError`` — what ``load_checkpoint`` used to raise bare —
+    and carries ``leaf`` (flat-tree index) and ``shard`` (file name) so a
+    hot-swap caller can log WHICH tensor the stream corrupted.  Raised
+    during streaming, before the full tree is materialised: a bad shard is
+    rejected before any epoch swap begins."""
+
+    def __init__(self, message: str, *, leaf: Optional[int] = None,
+                 shard: Optional[str] = None):
+        super().__init__(message)
+        self.leaf = leaf
+        self.shard = shard
+
+
 def _flatten(tree: Any):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
@@ -82,27 +98,52 @@ def save_checkpoint(directory: str | Path, step: int, tree: Any,
     return final
 
 
+def iter_checkpoint(directory: str | Path, step: int,
+                    verify: bool = True):
+    """Stream a checkpoint one tensor at a time: yields ``(index, array)``
+    in flat-tree order, CRC-verifying each leaf AS IT IS READ.
+
+    This is the hot-swap staging primitive: the serving engine builds its
+    shadow params from this stream while decode continues, and a corrupted
+    shard raises :class:`CheckpointCorrupt` at the first bad tensor —
+    nothing downstream (lock, drain, epoch bump) has happened yet.  Memory
+    high-water is one shard, not the whole tree."""
+    d = Path(directory) / f"step_{step:09d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    by_shard: Dict[int, List[int]] = {}
+    for meta in manifest["leaves"]:
+        by_shard.setdefault(meta["shard"], []).append(meta["index"])
+    for sid in sorted(by_shard):
+        fn = manifest["shards"][sid]
+        with np.load(d / fn) as z:
+            for i in by_shard[sid]:
+                try:
+                    a = z[f"leaf_{i}"]
+                except KeyError:
+                    raise CheckpointCorrupt(
+                        f"leaf {i} missing from {fn}", leaf=i, shard=fn)
+                meta = manifest["leaves"][i]
+                if verify:
+                    crc = zlib.crc32(np.ascontiguousarray(a).tobytes())
+                    if crc != meta["crc32"]:
+                        raise CheckpointCorrupt(
+                            f"checksum mismatch on leaf {i} "
+                            f"(manifest {meta['crc32']:#010x}, "
+                            f"stream {crc:#010x})", leaf=i, shard=fn)
+                yield i, a
+
+
 def load_checkpoint(directory: str | Path, step: int, like: Any,
                     verify: bool = True) -> Any:
     d = Path(directory) / f"step_{step:09d}"
     manifest = json.loads((d / "manifest.json").read_text())
     leaves, treedef = _flatten(like)
-    assert len(leaves) == len(manifest["leaves"]), \
-        f"tree mismatch: {len(leaves)} vs {len(manifest['leaves'])}"
-    by_shard: Dict[int, List[int]] = {}
-    for meta in manifest["leaves"]:
-        by_shard.setdefault(meta["shard"], []).append(meta["index"])
+    if len(leaves) != len(manifest["leaves"]):
+        raise CheckpointCorrupt(
+            f"tree mismatch: {len(leaves)} vs {len(manifest['leaves'])}")
     out: List[Optional[np.ndarray]] = [None] * len(leaves)
-    for sid, idxs in by_shard.items():
-        with np.load(d / manifest["shards"][sid]) as z:
-            for i in idxs:
-                a = z[f"leaf_{i}"]
-                meta = manifest["leaves"][i]
-                if verify:
-                    crc = zlib.crc32(np.ascontiguousarray(a).tobytes())
-                    if crc != meta["crc32"]:
-                        raise IOError(f"checksum mismatch on leaf {i}")
-                out[i] = a
+    for i, a in iter_checkpoint(directory, step, verify=verify):
+        out[i] = a
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

@@ -63,6 +63,7 @@ import numpy as np
 
 from ..core.atomics import LiveMem
 from ..core.device_bravo import LeaseHandle
+from ..core.errors import DrainTimeout
 from ..core.factory import LockEnv
 from ..core.registry import BravoRegistry, RegistryHandle
 from ..models import model as M
@@ -74,6 +75,35 @@ from .steps import (jit_step, make_decode_step, make_paged_prefill_step,
 
 # device lease handles share one protocol (acquire/release/revoke/rearm)
 Lease = Optional[Union[LeaseHandle, RegistryHandle]]
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Engine *mechanism* timings (the scheduler config stays pure policy).
+
+    Hoisted out of the thread loops so chaos tests can run at tight
+    timings — and so the drain deadline the hot-swap writer hands the
+    registry is a configuration, not a magic number buried in a poll."""
+    handler_poll_s: float = 0.1     # legacy handlers' inq.get timeout
+    idle_poll_s: float = 0.05       # scheduler loop's idle inq.get timeout
+    join_timeout_s: float = 10.0    # stop()'s per-thread join bound
+    drain_wait_poll_s: float = 0.0005  # lease revocation poll cadence
+    drain_max_wait_s: float = 5.0   # bounded-drain deadline (DrainTimeout)
+    swap_retries: int = 3           # hot_swap attempts after a DrainTimeout
+    swap_backoff_s: float = 0.05    # base backoff between attempts (doubles)
+
+
+class EngineFailure(RuntimeError):
+    """A worker thread died.  Carries every recorded failure as
+    ``(thread_name, exception, scheduler_state)`` triples so the caller
+    sees WHAT crashed and what the policy FSM looked like at that moment —
+    the old ``t.join(timeout=...)`` swallowed all of it."""
+
+    def __init__(self, failures):
+        names = ", ".join(f"{n}: {type(e).__name__}({e})"
+                          for n, e, _ in failures)
+        super().__init__(f"{len(failures)} engine thread(s) died — {names}")
+        self.failures = list(failures)
 
 
 @dataclasses.dataclass
@@ -92,6 +122,8 @@ class EngineStats:
     tokens_out: int = 0
     prefills: int = 0
     weight_swaps: int = 0
+    swap_retries: int = 0      # hot_swap attempts that hit a DrainTimeout
+    swap_failures: int = 0     # hot_swaps abandoned after all retries
     compactions: int = 0
     read_acquires: int = 0
     # prefix-cache accounting (scheduler mode)
@@ -127,29 +159,41 @@ class ModelStore:
         clears the leases actually won (a denied reader must not wipe the
         slot of whoever it collided with)."""
         tok = self.lock.acquire_read()
-        granted = None
+        granted = gen = None
         if self.leases is not None:
             try:
                 self.leases.rearm()      # host-clock check; dispatch only
                 granted = self.leases.acquire(reader_ids)  # when inhibited
+                gen = getattr(self.leases, "gen", None)
             except BaseException:        # never leak the host read lock
                 self.lock.release_read(tok)
                 raise
-        return (tok, granted), self.params, self.epoch
+        return (tok, granted, gen), self.params, self.epoch
 
     def done_read_batch(self, tok, reader_ids):
-        host_tok, granted = tok
+        host_tok, granted, gen = tok
         try:
             if granted is not None:
-                self.leases.release(reader_ids, granted=granted)
+                # generation check: if a stuck-lane scrub regenerated the
+                # lock value since this acquire, our slots were already
+                # scrubbed — a release through the REFRESHED handle would
+                # hash to the new value's slots and could wipe a lease the
+                # rearmed lock legitimately granted
+                if gen is None or gen == getattr(self.leases, "gen", None):
+                    self.leases.release(reader_ids, granted=granted)
         finally:
             self.lock.release_read(host_tok)
 
-    def swap(self, new_params):
+    def swap(self, new_params, **revoke_kw):
+        """Install new weights: write lock, bounded drain of the device
+        leases (``revoke_kw`` forwards ``max_wait_s``/``wait_poll_s``),
+        then epoch bump.  A :class:`DrainTimeout` propagates BEFORE the
+        params are touched — the caller degrades, readers keep decoding on
+        the old epoch."""
         tok = self.lock.acquire_write()
         try:
             if self.leases is not None:
-                self.leases.revoke()     # drain device leases BRAVO-style
+                self.leases.revoke(**revoke_kw)  # drain BRAVO-style
             self.params = new_params
             self.epoch += 1
         finally:
@@ -362,8 +406,10 @@ class ServingEngine:
                  max_seq: int = 128, slots_per_handler: int = 4,
                  n_pages: int = 4096, env: Optional[LockEnv] = None,
                  device_leases: bool = True, kv_stripes: int = 4,
-                 scheduler: Optional[SchedulerConfig] = None):
+                 scheduler: Optional[SchedulerConfig] = None,
+                 engine_cfg: Optional[EngineConfig] = None):
         self.cfg = cfg
+        self.ecfg = engine_cfg or EngineConfig()
         self.mesh = mesh
         self.rules = rules
         self.env = env or LockEnv(LiveMem())
@@ -391,6 +437,12 @@ class ServingEngine:
         self.inq: "queue.Queue[Optional[Request]]" = queue.Queue()
         self._threads: List[threading.Thread] = []
         self._stop = threading.Event()
+        # worker-thread failures: (name, exception, scheduler snapshot);
+        # stop()/check_health() re-raise instead of swallowing
+        self._failures: List[tuple] = []
+        self._failures_lock = threading.Lock()
+        self._degraded = threading.Event()   # hot-swap drain failed: stop
+        #                                      admitting, drain in-flight
         self._prefill = jax.jit(make_prefill_step(cfg, mesh, rules))
         self._decode = jax.jit(make_decode_step(cfg, mesh, rules))
 
@@ -440,7 +492,7 @@ class ServingEngine:
             # gather up to B requests
             reqs: List[Request] = []
             try:
-                reqs.append(self.inq.get(timeout=0.1))
+                reqs.append(self.inq.get(timeout=self.ecfg.handler_poll_s))
             except queue.Empty:
                 continue
             if reqs[0] is None:
@@ -693,6 +745,11 @@ class ServingEngine:
         request its post-dedup page need); the engine attaches the
         admitted slots' pages — shared, copied or fresh (no eviction on
         admission: a new request never preempts running work)."""
+        if self._degraded.is_set():
+            return      # drain failure in flight: finish what's running on
+            #             the old epoch, admit nothing new until the swap
+            #             lands or is abandoned (concurrency restriction,
+            #             arXiv:1905.10818 taken to its zero-admission end)
         admitted = self.scheduler.admit(self._free_est,
                                         need_fn=self._peek_need)
         for i, st in enumerate(admitted):
@@ -837,7 +894,7 @@ class ServingEngine:
         while not self._stop.is_set():
             if not self._schedule_tick():
                 try:
-                    r = self.inq.get(timeout=0.05)
+                    r = self.inq.get(timeout=self.ecfg.idle_poll_s)
                 except queue.Empty:
                     continue
                 if r is not None:
@@ -846,10 +903,7 @@ class ServingEngine:
     # ------------------------------------------------------- background ops
     def _updater(self, period_s: float, perturb: Callable[[Any], Any]):
         while not self._stop.wait(period_s):
-            new = perturb(self.store.params)
-            self.store.swap(new)
-            with self._stats_lock:
-                self.stats.weight_swaps += 1
+            self.hot_swap(perturb(self.store.params))
 
     def _compactor(self, period_s: float):
         while not self._stop.wait(period_s):
@@ -863,32 +917,98 @@ class ServingEngine:
                 with self._stats_lock:
                     self.stats.compactions += 1
 
+    # ---------------------------------------------------- hot swap (PR 7)
+    def stage_checkpoint(self, directory, step: int):
+        """Stream a checkpoint into a SHADOW params pytree while serving
+        continues.  Per-tensor checksums are verified leaf by leaf during
+        the stream, so a corrupted shard raises
+        :class:`~repro.ft.checkpoint.CheckpointCorrupt` here — before any
+        lock is taken or epoch swapped.  No lock is held: staging runs
+        entirely beside the decode fast path."""
+        from ..ft.checkpoint import load_checkpoint
+        return load_checkpoint(directory, step, like=self.store.params,
+                               verify=True)
+
+    def hot_swap(self, new_params: Any = None, *,
+                 checkpoint: Optional[tuple] = None,
+                 retries: Optional[int] = None,
+                 backoff_s: Optional[float] = None) -> bool:
+        """Weight hot-swap as a first-class serving operation.
+
+        Stage (``checkpoint=(dir, step)`` streams + CRC-verifies into a
+        shadow pytree; or pass ``new_params`` directly), then revoke the
+        model-epoch leases with a BOUNDED drain and install.  On
+        :class:`DrainTimeout` — a wedged reader, a dropped revocation ack —
+        degrade instead of crashing: stop admitting (``_admit`` gates on
+        the degraded flag), let in-flight decode finish on the OLD epoch,
+        and retry with doubling backoff.  Returns True once the swap
+        lands; False if all retries drained out — the engine resumes
+        normal admission on the old weights, zero requests dropped."""
+        if (new_params is None) == (checkpoint is None):
+            raise ValueError(
+                "hot_swap: pass exactly one of new_params / checkpoint")
+        if checkpoint is not None:
+            new_params = self.stage_checkpoint(*checkpoint)
+        ecfg = self.ecfg
+        retries = ecfg.swap_retries if retries is None else retries
+        backoff = ecfg.swap_backoff_s if backoff_s is None else backoff_s
+        for attempt in range(retries + 1):
+            try:
+                self.store.swap(new_params,
+                                wait_poll_s=ecfg.drain_wait_poll_s,
+                                max_wait_s=ecfg.drain_max_wait_s)
+            except DrainTimeout:
+                with self._stats_lock:
+                    self.stats.swap_retries += 1
+                if attempt == retries:
+                    with self._stats_lock:
+                        self.stats.swap_failures += 1
+                    self._degraded.clear()   # abandoned: keep serving the
+                    return False             # old epoch, readmit traffic
+                self._degraded.set()
+                self._stop.wait(backoff * (2 ** attempt))
+            else:
+                self._degraded.clear()
+                with self._stats_lock:
+                    self.stats.weight_swaps += 1
+                return True
+        return False                         # unreachable; keeps mypy calm
+
     # --------------------------------------------------------------- public
+    def _spawn(self, name: str, target: Callable, *args) -> None:
+        """Start a worker whose death is RECORDED, not swallowed: the
+        exception plus a scheduler-state snapshot land in ``_failures``
+        and re-raise from ``stop()`` / ``check_health()``."""
+        def body():
+            try:
+                target(*args)
+            except BaseException as e:
+                snap = None
+                try:
+                    if self.scheduler is not None:
+                        snap = self.scheduler.stats()
+                except Exception:
+                    pass                 # the snapshot must never mask e
+                with self._failures_lock:
+                    self._failures.append((name, e, snap))
+        t = threading.Thread(target=body, name=name, daemon=True)
+        t.start()
+        self._threads.append(t)
+
     def start(self, *, swap_period_s: float = 0.0,
               perturb: Optional[Callable[[Any], Any]] = None,
               compact_period_s: float = 0.0) -> None:
         if self.scheduler is not None:
-            t = threading.Thread(target=self._schedule_loop, daemon=True)
-            t.start()
-            self._threads.append(t)
+            self._spawn("scheduler", self._schedule_loop)
         else:
             for h in range(self.handlers):
-                t = threading.Thread(target=self._handler, args=(h,),
-                                     daemon=True)
-                t.start()
-                self._threads.append(t)
+                self._spawn(f"handler-{h}", self._handler, h)
         if swap_period_s > 0:
             pf = perturb or (lambda p: jax.tree.map(
                 lambda x: x * (1.0 + 1e-6) if x.dtype.kind == "f" else x, p))
-            t = threading.Thread(target=self._updater,
-                                 args=(swap_period_s, pf), daemon=True)
-            t.start()
-            self._threads.append(t)
+            self._spawn("updater", self._updater, swap_period_s, pf)
         if compact_period_s > 0:
-            t = threading.Thread(target=self._compactor,
-                                 args=(compact_period_s,), daemon=True)
-            t.start()
-            self._threads.append(t)
+            self._spawn("compactor", self._compactor, compact_period_s)
 
     def submit(self, req: Request) -> None:
         if self.sched_cfg is not None and \
@@ -899,12 +1019,23 @@ class ServingEngine:
                 f"{self.sched_cfg.max_seq}")
         self.inq.put(req)
 
+    def check_health(self) -> None:
+        """Raise :class:`EngineFailure` if any worker thread has died.
+        Cheap (one lock, no dispatch) — callable from traffic loops."""
+        with self._failures_lock:
+            if self._failures:
+                raise EngineFailure(self._failures)
+
     def stop(self) -> None:
+        """Stop workers and RE-RAISE any recorded thread death — the old
+        ``join(timeout=...)``-and-forget turned crashed schedulers into
+        silently hung requests."""
         self._stop.set()
         for _ in self._threads:
             self.inq.put(None)
         for t in self._threads:
-            t.join(timeout=10.0)
+            t.join(timeout=self.ecfg.join_timeout_s)
+        self.check_health()
 
     def lock_stats(self) -> Dict[str, Any]:
         out: Dict[str, Any] = {"engine": dataclasses.asdict(self.stats)}

@@ -94,6 +94,7 @@ def test_deadlock_detected():
     ("bravo-rw", None),          # fully explored (~900 schedules)
     ("bravo-2r1w", 1500),
     ("registry-model", 1500),
+    ("parking-model", 1500),
     ("kvpool-model", 1500),
 ])
 def test_clean_scenarios_no_violation(name, budget):
@@ -111,6 +112,7 @@ def test_clean_scenarios_no_violation(name, budget):
 @pytest.mark.parametrize("mutation,expect_invariant", [
     ("release-token-mismatch", "reader-count-underflow"),
     ("drain-off-by-one", "writer-exclusion-after-drain"),
+    ("park-wakeup-lost", "deadlock"),
     ("cow-write-through", "cow-write-through-shared"),
 ])
 def test_mutation_found_and_replays(mutation, expect_invariant):

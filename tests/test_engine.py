@@ -149,3 +149,65 @@ def test_denied_reader_release_keeps_winner_lease():
     assert int(K.revocation_poll(st.table, 9)) > 0
     st = DB.release(st, 9, readers, granted=fg1)
     assert int(K.revocation_poll(st.table, 9)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Worker-thread failure surfacing + EngineConfig wiring
+# ---------------------------------------------------------------------------
+
+
+def test_crashed_worker_thread_reraises_from_stop():
+    """The silent-death regression: a worker that raises must be recorded
+    and re-raised (with a scheduler-state snapshot) from stop(), never
+    swallowed by a join timeout."""
+    import time
+
+    from repro.serving.engine import EngineFailure
+
+    cfg = configs.get_smoke("llama3.2-1b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, mesh=mesh1(), rules=MeshRules(),
+                        handlers=1, max_seq=32, n_pages=64)
+    boom = RuntimeError("injected updater crash")
+
+    def bad_perturb(p):
+        raise boom
+
+    eng.start(swap_period_s=0.02, perturb=bad_perturb)
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline:
+        try:
+            eng.check_health()
+        except EngineFailure:
+            break
+        time.sleep(0.01)
+    with pytest.raises(EngineFailure) as ei:
+        eng.stop()
+    failures = ei.value.failures
+    assert any(n == "updater" and e is boom for n, e, _ in failures)
+    assert all(s is None or isinstance(s, dict) for _, _, s in failures)
+    assert "updater" in str(ei.value)
+
+
+def test_engine_config_drives_polls_and_swap_policy():
+    from repro.serving.engine import EngineConfig
+
+    cfg = configs.get_smoke("llama3.2-1b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    ecfg = EngineConfig(handler_poll_s=0.01, idle_poll_s=0.005,
+                        drain_max_wait_s=0.5, swap_retries=1,
+                        swap_backoff_s=0.01)
+    eng = ServingEngine(cfg, params, mesh=mesh1(), rules=MeshRules(),
+                        handlers=1, max_seq=32, n_pages=64,
+                        engine_cfg=ecfg)
+    assert eng.ecfg is ecfg
+    # defaults hold when no config is passed (the old literals, hoisted)
+    dflt = ServingEngine(cfg, params, mesh=mesh1(), rules=MeshRules(),
+                         handlers=1, max_seq=32, n_pages=64).ecfg
+    assert dflt.handler_poll_s == 0.1 and dflt.idle_poll_s == 0.05
+    # the degraded gate blocks hot_swap retries from admitting: an
+    # abandoned swap clears it and reports False, zero epochs bumped
+    epoch = eng.store.epoch
+    assert eng.hot_swap(params) is True          # no traffic: lands clean
+    assert eng.store.epoch == epoch + 1
+    assert not eng._degraded.is_set()

@@ -162,3 +162,82 @@ def test_data_pipeline_determinism_and_rebalance():
     follow = (t[:, :-1] * 31 + 7) % data.vocab
     frac = np.mean(follow == t[:, 1:])
     assert frac > 0.3
+
+
+# ---------------------------------------------------------------------------
+# Streaming checkpoint integrity (the hot-swap staging path)
+# ---------------------------------------------------------------------------
+
+
+def test_iter_checkpoint_streams_leaves_in_order_with_crc(tmp_path):
+    from repro.ft.checkpoint import iter_checkpoint
+
+    rng = np.random.default_rng(3)
+    tree = {"a": rng.normal(size=(17,)).astype(np.float32),
+            "b": {"c": np.arange(12, dtype=np.int32),
+                  "d": rng.normal(size=(3, 5)).astype(np.float32)}}
+    save_checkpoint(tmp_path, 2, tree)
+    flat = jax.tree.leaves(tree)
+    got = list(iter_checkpoint(tmp_path, 2))
+    assert [i for i, _ in got] == list(range(len(flat)))
+    for (_, a), b in zip(got, flat):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_corrupted_stream_rejected_typed_at_the_bad_leaf(tmp_path):
+    """A manifest/stream CRC mismatch raises CheckpointCorrupt AT the
+    corrupted tensor, identifying leaf and shard — the contract the
+    engine's staging path relies on to reject a bad swap before any lock
+    is taken or epoch bumped."""
+    import json as _json
+
+    from repro.ft.checkpoint import CheckpointCorrupt, iter_checkpoint
+
+    tree = {"w": np.arange(64, dtype=np.float32),
+            "v": np.arange(32, dtype=np.float32)}
+    d = save_checkpoint(tmp_path, 1, tree)
+    mf = d / "manifest.json"
+    manifest = _json.loads(mf.read_text())
+    manifest["leaves"][1]["crc32"] ^= 0x5A5A5A5A
+    mf.write_text(_json.dumps(manifest))
+
+    it = iter_checkpoint(tmp_path, 1)
+    i0, a0 = next(it)                     # leaf 0 still streams fine
+    assert i0 == 0
+    with pytest.raises(CheckpointCorrupt) as ei:
+        next(it)
+    assert ei.value.leaf == 1 and ei.value.shard is not None
+    with pytest.raises(CheckpointCorrupt):
+        load_checkpoint(tmp_path, 1, tree)
+    # verify=False is the escape hatch (forensics on a damaged checkpoint)
+    vals = dict(iter_checkpoint(tmp_path, 1, verify=False))
+    np.testing.assert_array_equal(vals[1], jax.tree.leaves(tree)[1])
+
+
+def test_corrupt_checkpoint_never_swaps_engine_epoch(tmp_path):
+    """Engine-level: ``hot_swap(checkpoint=...)`` on a corrupted stream
+    raises during STAGING — the epoch is untouched and serving state
+    never sees a partial pytree."""
+    import json as _json
+
+    from repro.ft.checkpoint import CheckpointCorrupt
+    from repro.serving.engine import ServingEngine
+
+    cfg = configs.get_smoke("llama3.2-1b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, mesh=mesh1(), rules=MeshRules(),
+                        handlers=1, max_seq=32, n_pages=64)
+    d = save_checkpoint(tmp_path, 5, jax.tree.map(np.asarray, params))
+    mf = d / "manifest.json"
+    manifest = _json.loads(mf.read_text())
+    manifest["leaves"][0]["crc32"] ^= 1
+    mf.write_text(_json.dumps(manifest))
+    epoch = eng.store.epoch
+    with pytest.raises(CheckpointCorrupt):
+        eng.hot_swap(checkpoint=(tmp_path, 5))
+    assert eng.store.epoch == epoch
+    # a clean checkpoint through the same path DOES swap
+    manifest["leaves"][0]["crc32"] ^= 1
+    mf.write_text(_json.dumps(manifest))
+    assert eng.hot_swap(checkpoint=(tmp_path, 5)) is True
+    assert eng.store.epoch == epoch + 1

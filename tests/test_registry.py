@@ -491,3 +491,113 @@ def test_registry_revoke_routes_through_sharded_collective():
     # dropping the mesh restores the host-path revoke
     reg.configure_mesh(None)
     assert noisy.revoke() >= 1
+
+
+# ---------------------------------------------------------------------------
+# Bounded drain, writer parking, stuck-lane scrub (the hot-swap writer path)
+# ---------------------------------------------------------------------------
+
+
+def test_revoke_deadline_raises_typed_drain_timeout_and_scrubs():
+    """A wedged reader (lease published, holder gone) must bound the
+    drain: ``revoke(max_wait_s=...)`` raises a typed DrainTimeout — NOT a
+    hang, NOT a silent success — after scrubbing the stuck lane and
+    regenerating the lane's lock value so the stale publish can never
+    match a rearmed lock."""
+    from repro.core.errors import DrainTimeout, ProtocolError
+
+    reg = BravoRegistry(slots=SLOTS)
+    h = reg.alloc("wedged")
+    rids = jnp.asarray(pick_readers([h.lock_id], 2), jnp.int32)
+    g = h.acquire(rids)
+    assert np.asarray(g).all()
+    old_val, old_gen = h.lock_id, h.gen
+
+    t0 = time.monotonic()
+    with pytest.raises(DrainTimeout) as ei:
+        h.revoke(max_wait_s=0.1)
+    assert time.monotonic() - t0 < 5.0, "drain must be bounded"
+    e = ei.value
+    assert isinstance(e, TimeoutError) and isinstance(e, ProtocolError)
+    assert e.idx == h.idx
+    # the scrub: stale slots zeroed, value regenerated, generation bumped
+    assert reg.drain_timeouts == 1 and reg.lane_scrubs == 1
+    assert h.lock_id != old_val and h.gen == old_gen + 1
+    assert not np.asarray(reg.table).any(), "stale publishes must be gone"
+    assert reg._revoking[h.idx] == 0, "drain gate closed on the raise path"
+    # the lane is immediately serviceable under the fresh value
+    reg.inhibit_until_ns[h.idx] = 0
+    assert h.rearm()
+    g2 = h.acquire(rids)
+    assert np.asarray(g2).any()
+    h.release(rids, granted=g2)
+    assert h.revoke() >= 1                 # clean writer cycle, no timeout
+    assert reg.drain_timeouts == 1
+
+
+def test_second_writer_parks_instead_of_polling():
+    """Two writers on one lock: the second must PARK on the first's drain
+    gate (TWA-style waiting slot) and be woken when the drain completes —
+    no spin on the device table."""
+    reg = BravoRegistry(slots=SLOTS)
+    h = reg.alloc("contended")
+    held = jnp.asarray(pick_readers([h.lock_id], 2), jnp.int32)
+    g = h.acquire(held)
+    assert np.asarray(g).all()
+
+    order = []
+    errs = []
+
+    def writer(tag):
+        try:
+            order.append((tag, h.revoke(max_wait_s=30.0)))
+        except Exception as e:                       # pragma: no cover
+            errs.append(e)
+
+    t1 = threading.Thread(target=writer, args=("w1",), daemon=True)
+    t1.start()
+    deadline = time.monotonic() + 10.0
+    while not reg._revoking[h.idx]:                  # w1's drain in flight
+        assert time.monotonic() < deadline
+        time.sleep(0.001)
+    t2 = threading.Thread(target=writer, args=("w2",), daemon=True)
+    t2.start()
+    while reg.parks < 1:                             # w2 actually parked
+        assert time.monotonic() < deadline
+        time.sleep(0.001)
+    assert not order, "neither writer may finish against live leases"
+
+    h.release(held, granted=g)                       # acks arrive
+    t1.join(30.0)
+    t2.join(30.0)
+    assert not errs, errs
+    assert len(order) == 2 and reg.parks >= 1
+    assert reg._revoking[h.idx] == 0
+    assert reg.revocations[h.idx] == 2
+
+
+def test_free_parks_behind_drain_and_raises_drain_timeout():
+    """free() under an in-flight drain parks on the same gate and, past
+    its deadline, raises the same typed error the writers get."""
+    from repro.core.errors import DrainTimeout
+
+    reg = BravoRegistry(slots=SLOTS)
+    h = reg.alloc("busy")
+    held = jnp.asarray(pick_readers([h.lock_id], 1), jnp.int32)
+    g = h.acquire(held)
+    assert np.asarray(g).all()
+    t = threading.Thread(target=lambda: h.revoke(max_wait_s=30.0),
+                         daemon=True)
+    t.start()
+    deadline = time.monotonic() + 10.0
+    while not reg._revoking[h.idx]:
+        assert time.monotonic() < deadline
+        time.sleep(0.001)
+    parks_before = reg.parks
+    with pytest.raises(DrainTimeout):
+        reg.free(h, wait_s=0.05)
+    assert reg.parks > parks_before, "free must park, not poll"
+    assert not h.closed
+    h.release(held, granted=g)
+    t.join(30.0)
+    reg.free(h)
