@@ -138,16 +138,16 @@ def bench_swaps_under_traffic(max_new: int, n_req: int, n_swaps: int) -> dict:
     check(got == want, "tokens under hot-swaps == dense reference")
     check(landed == n_swaps, f"all {n_swaps} swaps landed (got {landed})")
     st = eng.lock_stats()
-    step = np.asarray(list(eng.step_ns)[2:], np.float64)
+    h_step = eng.metrics.histogram("engine.step_ns")
     rec = {"requests": n_req, "swaps": landed, "dropped": dropped,
            "tokens_exact": got == want,
            "swap_p50_ms": round(float(np.percentile(lats, 50)) * 1e3, 2),
            "swap_p99_ms": round(float(np.percentile(lats, 99)) * 1e3, 2),
            "weight_swaps": st["engine"]["weight_swaps"],
            "drain_timeouts": st["device_leases"]["drain_timeouts"]}
-    if step.size:
-        rec["decode_p50_us"] = round(float(np.percentile(step, 50)) / 1e3, 2)
-        rec["decode_p99_us"] = round(float(np.percentile(step, 99)) / 1e3, 2)
+    if h_step.count:
+        rec["decode_p50_us"] = round(h_step.quantile(0.50) / 1e3, 2)
+        rec["decode_p99_us"] = round(h_step.quantile(0.99) / 1e3, 2)
     return rec
 
 

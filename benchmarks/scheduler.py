@@ -247,12 +247,13 @@ def bench_mesh2d(smoke: bool, max_new: int) -> dict:
             "wall_s": round(wall, 3)}
 
 
-def _latency_stats(eng, skip: int = 4) -> dict:
-    lat = np.asarray(list(eng.step_ns)[skip:], np.float64)
-    if not lat.size:
+def _latency_stats(eng) -> dict:
+    # warmup exclusion is built into the engine (obs_warmup_steps)
+    h = eng.metrics.histogram("engine.step_ns")
+    if not h.count:
         return {}
-    return {"decode_p50_us": round(float(np.percentile(lat, 50)) / 1e3, 2),
-            "decode_p99_us": round(float(np.percentile(lat, 99)) / 1e3, 2)}
+    return {"decode_p50_us": round(h.quantile(0.50) / 1e3, 2),
+            "decode_p99_us": round(h.quantile(0.99) / 1e3, 2)}
 
 
 def bench_throughput(max_new: int) -> dict:

@@ -1,0 +1,144 @@
+"""Perf-regression gate: compare fresh BENCH_*.json records against the
+committed baselines with per-metric tolerance bands.
+
+Every benchmark writes a flat-ish JSON record (``BENCH_<name>.json`` at
+the repo root is the committed baseline).  CI re-runs the bench into a
+scratch file and this gate diffs the two:
+
+* **booleans** may not regress: a ``true`` in the baseline (tokens_exact,
+  landed, rejected, ...) must still be ``true``.  ``false -> true`` is an
+  improvement and passes.
+* **latency-like numbers** (key ends in ``_ns``/``_us``/``_ms``/``_s``
+  or contains ``overhead``): lower is better — fail when
+  ``fresh > baseline * (1 + tol)``.
+* **throughput-like numbers** (key contains ``per_s``): higher is better
+  — fail when ``fresh < baseline * (1 - tol)``.
+* **must-not-grow counters** (``dropped``, ``drain_timeouts``,
+  ``swap_failures``, ``dedup_misses``): fail when fresh exceeds the
+  baseline in absolute terms.
+* the ``failures`` list must be empty in the fresh record.
+* everything else (counts, config echoes) is informational only.
+
+The default band is deliberately wide (``--tol 0.5``): CI runs on shared
+CPU where 2x timing noise is routine; the gate exists to catch order-of-
+magnitude regressions and lost guarantees, not 5% drift.  Tighten with
+``--tol`` where the runner is quiet.
+
+    python scripts/bench_gate.py --fresh /tmp/BENCH_obs.json
+    python scripts/bench_gate.py --fresh a.json b.json --tol 0.35
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, Iterator, List, Tuple
+
+REPO = Path(__file__).resolve().parents[1]
+
+_LAT_SUFFIXES = ("_ns", "_us", "_ms", "_s")
+_GROW_FORBIDDEN = {"dropped", "drain_timeouts", "swap_failures",
+                   "dedup_misses"}
+_SKIP_KEYS = {"mode", "backend", "jax", "model", "bench"}
+
+
+def _leaves(rec: Any, prefix: str = "") -> Iterator[Tuple[str, str, Any]]:
+    """Yield (dotted-path, leaf-key, value) for every scalar leaf."""
+    if isinstance(rec, dict):
+        for k, v in rec.items():
+            yield from _leaves(v, f"{prefix}.{k}" if prefix else k)
+    elif isinstance(rec, list):
+        for i, v in enumerate(rec):
+            yield from _leaves(v, f"{prefix}[{i}]")
+    else:
+        yield prefix, prefix.rsplit(".", 1)[-1], rec
+
+
+def _is_latency(key: str) -> bool:
+    if "per_s" in key:        # throughput, not a latency
+        return False
+    return key.endswith(_LAT_SUFFIXES) or "overhead" in key
+
+
+def compare(baseline: dict, fresh: dict, tol: float) -> List[str]:
+    """Return the list of regressions (empty == gate passes)."""
+    bad: List[str] = []
+    for path, key, bv in _leaves(baseline):
+        if key in _SKIP_KEYS:
+            continue
+        fv = fresh
+        try:
+            for part in path.replace("]", "").replace("[", ".").split("."):
+                fv = fv[int(part)] if part.isdigit() else fv[part]
+        except (KeyError, IndexError, TypeError):
+            bad.append(f"{path}: missing from fresh record "
+                       f"(baseline {bv!r})")
+            continue
+        if isinstance(bv, bool):
+            if bv and not fv:
+                bad.append(f"{path}: guarantee lost (baseline true, "
+                           f"fresh false)")
+        elif isinstance(bv, (int, float)) and isinstance(fv, (int, float)):
+            if key in _GROW_FORBIDDEN:
+                if fv > bv:
+                    bad.append(f"{path}: {fv} > baseline {bv} "
+                               f"(must not grow)")
+            elif _is_latency(key):
+                if bv >= 0 and fv > bv * (1.0 + tol) + 1e-9:
+                    bad.append(f"{path}: {fv} vs baseline {bv} "
+                               f"(> +{tol:.0%} band)")
+            elif "per_s" in key:
+                if fv < bv * (1.0 - tol) - 1e-9:
+                    bad.append(f"{path}: {fv} vs baseline {bv} "
+                               f"(< -{tol:.0%} band)")
+    fails = fresh.get("failures")
+    if fails:
+        bad.append(f"failures: fresh record reports {fails}")
+    return bad
+
+
+def gate_file(fresh_path: Path, baseline_dir: Path, tol: float) -> int:
+    fresh = json.loads(fresh_path.read_text())
+    name = fresh.get("bench")
+    if not name:
+        print(f"{fresh_path}: no 'bench' key — cannot locate baseline",
+              file=sys.stderr)
+        return 1
+    bpath = baseline_dir / f"BENCH_{name}.json"
+    if not bpath.exists():
+        print(f"{fresh_path}: no committed baseline {bpath.name}; "
+              f"treating as new bench (pass)")
+        return 0
+    baseline = json.loads(bpath.read_text())
+    bad = compare(baseline, fresh, tol)
+    if bad:
+        print(f"REGRESSION vs {bpath.name}:", file=sys.stderr)
+        for b in bad:
+            print(f"  {b}", file=sys.stderr)
+        return 1
+    print(f"{fresh_path.name}: within bands of {bpath.name} "
+          f"(tol {tol:.0%})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compare fresh BENCH_*.json against committed "
+                    "baselines with tolerance bands")
+    ap.add_argument("--fresh", nargs="+", required=True,
+                    help="freshly generated bench record(s)")
+    ap.add_argument("--baseline-dir", default=str(REPO),
+                    help="where the committed BENCH_*.json live")
+    ap.add_argument("--tol", type=float, default=0.5,
+                    help="relative tolerance band (default 0.5 = ±50%%)")
+    args = ap.parse_args(argv)
+    rc = 0
+    for f in args.fresh:
+        rc |= gate_file(Path(f), Path(args.baseline_dir), args.tol)
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,10 +1,16 @@
 #!/usr/bin/env bash
 # CI entry point: fail fast on import-time breakage, then run the static
 # analysis layer, the tier-1 suite and the lock smoke.
-# Usage: scripts/ci.sh [--lint|--chaos] [extra pytest args...]
+# Usage: scripts/ci.sh [--lint|--chaos|--smoke] [extra pytest args...]
 #   --lint   run ONLY the static-analysis stage (analysis.check + ruff)
 #   --chaos  run ONLY the fault-injection stage (seeded fault matrix +
-#            the writer-parking checker scenario and its seeded mutation)
+#            the writer-parking checker scenario and its seeded mutation);
+#            any failing cell dumps its per-request/per-lock obs timeline
+#            to stderr (repro.ft.faults traces every injection)
+#   --smoke  run ONLY the observability gates: benchmarks/obs.py (< 2%
+#            traced step-latency overhead, noise-level disabled sites,
+#            chrome export validates) + the bench-gate comparison against
+#            the committed BENCH_obs.json baseline
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -30,7 +36,8 @@ run_chaos() {
   # revocation acks, stalled lease-holding reader, straggler tick, KV-pool
   # exhaustion mid-prefill, corrupted checkpoint stream, worker-thread
   # crash.  Every cell must keep tokens bit-exact, drain refcounts to
-  # zero, and leave no stale bias lane.
+  # zero, and leave no stale bias lane.  Each cell runs traced; a failing
+  # cell dumps its per-request/per-lock event timeline to stderr.
   python -m repro.ft.faults --matrix --seed 0
 
   # writer-parking / bounded-drain protocol: the clean model-checker
@@ -42,12 +49,31 @@ run_chaos() {
     --mutation park-wakeup-lost
 }
 
+run_smoke_obs() {
+  # observability gates: the obs bench's own absolute checks (< 2%
+  # traced step-latency overhead, noise-level disabled emit sites,
+  # chrome export validates, zero-sync traced registry pair), then the
+  # perf-regression gate against the committed BENCH_obs.json.  The
+  # band is wide (the smoke workload is smaller than the committed full
+  # record): it catches order-of-magnitude drift and lost boolean
+  # guarantees; the tight <2% bound is asserted inside the bench itself.
+  local fresh
+  fresh="$(mktemp -t BENCH_obs_fresh.XXXXXX)"
+  python -m benchmarks.obs --smoke --out "$fresh"
+  python scripts/bench_gate.py --fresh "$fresh" --tol 4.0
+  rm -f "$fresh"
+}
+
 if [[ "${1:-}" == "--lint" ]]; then
   run_lint
   exit 0
 fi
 if [[ "${1:-}" == "--chaos" ]]; then
   run_chaos
+  exit 0
+fi
+if [[ "${1:-}" == "--smoke" ]]; then
+  run_smoke_obs
   exit 0
 fi
 
@@ -99,3 +125,7 @@ python -m benchmarks.prefill --smoke
 # the epoch swap), and the bounded-drain degradation path (DrainTimeout
 # -> stuck-lane scrub -> retried swap lands, still 0 dropped)
 python -m benchmarks.hotswap --smoke
+
+# observability overhead gates + perf-regression gate vs the committed
+# BENCH_obs.json baseline (see run_smoke_obs above / ci.sh --smoke)
+run_smoke_obs

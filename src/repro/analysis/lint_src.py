@@ -15,6 +15,14 @@ violates probabilistically, so they're enforced statically:
   full device round-trip; the engine's contract is dispatch-only while
   held, sync after release.  ``jnp.asarray`` (host->device, async) is
   fine.
+* ``obs-in-lease-window`` — inside a lease window (same ``try``/``finally``
+  shape as above) the only observability calls allowed are the O(1)
+  emits: ``_TR.emit`` / ``_TR.emit_span`` / ``_TR.span`` on the tracer
+  and ``add`` / ``observe`` / ``set`` / ``inc`` on metric cells.
+  Aggregating reads — ``snapshot()``, ``quantile()``, ``asdict()``,
+  ``format_timeline`` / ``derive_requests`` / ``to_chrome`` — iterate
+  every thread's cells or the whole ring and have no place on the hot
+  path while writers queue behind the lease.
 * ``scheduler-state-mutation`` — engine code may *call* scheduler methods
   but never assign through ``...scheduler.<attr>``; slot/queue state is
   owned by ``serving/scheduler.py`` so the admission invariants checked
@@ -42,6 +50,13 @@ SRC_ROOT = os.path.normpath(
 _SHARD_MAP_OK = {os.path.join("dist", "sharding.py")}
 _LEASE_RELEASES = {"done_read_batch", "done_read", "release_read"}
 _HOST_SYNCS = {"block_until_ready", "device_get"}
+
+# obs-in-lease-window: what an obs handle may do while a lease is held
+_OBS_TRACER_NAMES = {"_TR", "TRACER"}
+_OBS_TRACER_OK = {"emit", "emit_span", "span"}
+_OBS_METRIC_OK = {"counter", "gauge", "histogram",
+                  "add", "observe", "set", "inc"}
+_OBS_AGGREGATORS = {"format_timeline", "derive_requests", "to_chrome"}
 
 
 def _attr_chain(node: ast.AST) -> List[str]:
@@ -123,6 +138,57 @@ def _lease_window_findings(relpath: str, tree: ast.AST) -> List[Finding]:
     return out
 
 
+def _deep_chain(node: ast.AST) -> List[str]:
+    """Attr chain that walks *through* intermediate calls:
+    ``self.metrics.histogram("x").quantile`` ->
+    ``['self', 'metrics', 'histogram', 'quantile']``."""
+    parts: List[str] = []
+    while True:
+        if isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        elif isinstance(node, ast.Name):
+            parts.append(node.id)
+            break
+        else:
+            break
+    return parts[::-1]
+
+
+def _obs_lease_window_findings(relpath: str, tree: ast.AST) -> List[Finding]:
+    out = []
+    for t in ast.walk(tree):
+        if not (isinstance(t, ast.Try) and t.finalbody
+                and _releases_lease(t.finalbody)):
+            continue
+        for s in t.body:
+            for n in ast.walk(s):
+                if not isinstance(n, ast.Call):
+                    continue
+                name = _call_name(n)
+                chain = _deep_chain(n.func)
+                root = chain[0] if chain else ""
+                bad = None
+                if root in _OBS_TRACER_NAMES and name not in _OBS_TRACER_OK:
+                    bad = f"{root}.{name}"
+                elif "metrics" in chain[:-1] and name not in _OBS_METRIC_OK:
+                    bad = ".".join(chain)
+                elif isinstance(n.func, ast.Name) and name in _OBS_AGGREGATORS:
+                    bad = name
+                if bad:
+                    out.append(Finding(
+                        "obs-in-lease-window", f"{relpath}:{n.lineno}",
+                        f"{bad}() while a lease is held (released in the "
+                        f"finally at line {t.finalbody[0].lineno}) — only "
+                        f"O(1) emits (emit/emit_span/span, "
+                        f"add/observe/set/inc) are allowed inside a lease "
+                        f"window; aggregating reads sync every thread's "
+                        f"cells"))
+    return out
+
+
 def _scheduler_mutation_findings(relpath: str, tree: ast.AST) -> List[Finding]:
     out = []
 
@@ -161,6 +227,7 @@ def lint_file(relpath: str, source: str) -> List[Finding]:
     except SyntaxError as e:
         return [Finding("syntax-error", f"{relpath}:{e.lineno}", str(e.msg))]
     out = _shard_map_findings(relpath, tree)
+    out += _obs_lease_window_findings(relpath, tree)
     if relpath == os.path.join("serving", "engine.py"):
         out += _lease_window_findings(relpath, tree)
         out += _scheduler_mutation_findings(relpath, tree)

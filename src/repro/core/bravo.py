@@ -28,6 +28,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Tuple
 
+from ..obs import TRACER as _TR
 from .atomics import Mem
 from .rwlocks import RWLock
 from .table import VisibleReadersTable, next_lock_id
@@ -106,6 +107,8 @@ class BRAVO(RWLock):
                 if self.rbias.load():      # recheck (Listing 1 line 18)
                     if st:
                         st.fast_acquires += 1
+                    if _TR.enabled:
+                        _TR.emit("lock", "fast", lock=self.name)
                     return ("fast", slot)
                 slot.store(0)              # raced with a revoking writer
                 if st:
@@ -116,6 +119,8 @@ class BRAVO(RWLock):
         tok = self.u.acquire_read()
         if st:
             st.slow_acquires += 1
+        if _TR.enabled:
+            _TR.emit("lock", "slow", lock=self.name)
         if self.rbias.load() == 0 and mem.now() >= self.inhibit_until.load():
             # safe: we hold read permission, so no writer is active
             self.rbias.store(1)
@@ -140,12 +145,17 @@ class BRAVO(RWLock):
             # revoke bias (store-load fence required on TSO)
             self.rbias.store(0)
             mem.fence()
+            if _TR.enabled:
+                _TR.emit("lock", "revoke_begin", lock=self.name)
             start = mem.now()
             lid = self.lock_id
             for i in self.table.scan(lid):
                 # wait for each conflicting fast-path reader to depart
                 mem.wait_while(self.table.cell(i), lambda v, L=lid: v == L)
             now = mem.now()
+            if _TR.enabled:
+                _TR.emit("lock", "revoke_drain", lock=self.name,
+                         cost_ns=now - start)
             # primum non nocere: bound revocation-induced slow-down with
             # the per-lock adaptive window (same policy as the device side)
             self.revoke_ewma_ns, window = adaptive_inhibit(

@@ -69,6 +69,7 @@ import numpy as np
 from ..dist.sharding import hierarchical_psum, shard_map_compat
 from ..kernels import hash as H
 from ..kernels import ops as K
+from ..obs import TRACER as _TR
 from .bravo import DEFAULT_N, adaptive_inhibit
 from .errors import DrainTimeout
 from .table import mix_hash_vec, next_lock_id
@@ -359,6 +360,8 @@ class DeviceLeaseTable:
             self._armed = False
             self._revoking += 1     # gate rearm() for the whole drain
             self.revocations += 1
+        if _TR.enabled:
+            _TR.emit("lock", "revoke_begin", lock=f"lease{lock_id}")
 
         def poll_live(lid):
             # dispatch under the mutex: the scan is enqueued on the current
@@ -372,6 +375,9 @@ class DeviceLeaseTable:
                            max_wait_s=max_wait_s,
                            pipeline_depth=pipeline_depth)
             now = time.monotonic_ns()
+            if _TR.enabled:
+                _TR.emit_span("lock", "revoke_drain", start,
+                              lock=f"lease{lock_id}", scans=scans)
             with self._mu:
                 ewma, window = adaptive_inhibit(
                     self.state.revoke_ewma_ns, now - start, n)

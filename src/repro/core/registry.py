@@ -92,6 +92,8 @@ import numpy as np
 
 from ..kernels import hash as H
 from ..kernels import ops as K
+from ..obs import TRACER as _TR
+from ..obs.metrics import MetricsRegistry
 from .bravo import DEFAULT_N, adaptive_inhibit
 from .device_bravo import (TABLE_SLOTS, _drain, _lock_limbs,
                            _release_ids32_all_impl, _release_ids32_impl)
@@ -151,6 +153,13 @@ def _scrub_impl(table, val):
     return jnp.where(table == val, 0, table)
 
 
+def _fold_denied_impl(acc, granted):
+    """Fold the batch's denied-publish count into a device scalar: the
+    slow-path pressure counter stays device-resident (dispatch-only add,
+    no transfer) and is harvested only by the synchronizing ``stats()``."""
+    return acc + granted.size - jnp.sum(granted.astype(jnp.int32))
+
+
 class _Programs(NamedTuple):
     acquire: object
     acquire_by_index: object
@@ -159,6 +168,7 @@ class _Programs(NamedTuple):
     release_by_index: object
     scatter: object
     scrub: object
+    fold_denied: object
 
 
 @functools.lru_cache(maxsize=None)
@@ -173,7 +183,8 @@ def _programs() -> _Programs:
         release_all=K.jit_donating(_release_ids32_all_impl, 1),
         release_by_index=K.jit_donating(_release_by_index_impl, 1),
         scatter=K.jit_donating(_scatter_impl, 1),
-        scrub=K.jit_donating(_scrub_impl, 1))
+        scrub=K.jit_donating(_scrub_impl, 1),
+        fold_denied=K.jit_donating(_fold_denied_impl, 1))
 
 
 # ---------------------------------------------------------------------------
@@ -190,7 +201,8 @@ class BravoRegistry:
     docstring)."""
 
     def __init__(self, slots: int = TABLE_SLOTS,
-                 max_locks: int = MAX_LOCKS, n: int = DEFAULT_N):
+                 max_locks: int = MAX_LOCKS, n: int = DEFAULT_N,
+                 metrics: Optional[MetricsRegistry] = None):
         # the scan/poll kernels stream (BLOCK_ROWS, LANES) tiles
         if slots % (K.LANES * 8) != 0:
             raise ProtocolError(
@@ -225,12 +237,51 @@ class BravoRegistry:
         # its OWNING shard and polls with the hierarchical-psum count
         self._mesh = None
         self._sharded_revoke = None
-        self.publishes = 0
-        self.allocs = 0
-        self.recycles = 0
-        self.parks = 0            # writers that parked on a busy drain
-        self.drain_timeouts = 0   # bounded drains that hit their deadline
-        self.lane_scrubs = 0      # stuck-lane scrubs (value regenerated)
+        # observability: all counters live on the shared metrics registry
+        # (engine passes its own so the whole serving plane snapshots as
+        # one namespace); property accessors keep the old attribute API
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_publishes = self.metrics.counter("registry.publishes")
+        self._c_allocs = self.metrics.counter("registry.allocs")
+        self._c_recycles = self.metrics.counter("registry.recycles")
+        # writers that parked on a busy drain
+        self._c_parks = self.metrics.counter("registry.parks")
+        # bounded drains that hit their deadline
+        self._c_drain_timeouts = self.metrics.counter(
+            "registry.drain_timeouts")
+        # stuck-lane scrubs (value regenerated)
+        self._c_lane_scrubs = self.metrics.counter("registry.lane_scrubs")
+        self._h_revocation = self.metrics.histogram("registry.revocation_ns")
+        self._h_drain_wait = self.metrics.histogram("registry.drain_wait_ns")
+        # device-resident slow-path pressure counter: denied publishes are
+        # folded in-graph (dispatch-only) and harvested only in stats()
+        self._dev_denied = jnp.zeros((), jnp.int32)
+
+    # counter attribute compatibility (reads only; writes go through the
+    # metrics registry so per-thread cells keep increments lock-free)
+    @property
+    def publishes(self) -> int:
+        return self._c_publishes.value
+
+    @property
+    def allocs(self) -> int:
+        return self._c_allocs.value
+
+    @property
+    def recycles(self) -> int:
+        return self._c_recycles.value
+
+    @property
+    def parks(self) -> int:
+        return self._c_parks.value
+
+    @property
+    def drain_timeouts(self) -> int:
+        return self._c_drain_timeouts.value
+
+    @property
+    def lane_scrubs(self) -> int:
+        return self._c_lane_scrubs.value
 
     def configure_mesh(self, mesh, axis=("pod", "data")) -> None:
         """Route revocation through :func:`make_sharded_revoke` — the
@@ -269,8 +320,11 @@ class BravoRegistry:
                     f"allocated (free() a handle before alloc())")
             idx = self._free.pop()
             val = next_lock_id()
-            self.allocs += 1
-            self.recycles += int(self._used[idx])
+            self._c_allocs.add(1)
+            self._c_recycles.add(int(self._used[idx]))
+            if _TR.enabled:
+                _TR.emit("lock", "alloc", lane=idx, lock_id=val,
+                         recycled=bool(self._used[idx]))
             self._used[idx] = True
             self._vals[idx] = val
             self._armed[idx] = True
@@ -295,17 +349,28 @@ class BravoRegistry:
         drain may notify this slot — so the gate is rechecked each wake.
         Raises :class:`DrainTimeout` at ``deadline``."""
         park = self._park[idx % PARK_SLOTS]
-        while self._revoking[idx]:
-            self.parks += 1
-            remaining = deadline - time.monotonic()
-            if remaining <= 0 or not park.wait(timeout=remaining):
-                if not self._revoking[idx]:
-                    return        # gate closed exactly at the deadline
-                raise DrainTimeout(
-                    f"{who}: revocation drain still in flight on lane "
-                    f"{idx} (lock value {int(self._vals[idx])}) after "
-                    f"parking past the deadline",
-                    lock_id=int(self._vals[idx]), idx=idx)
+        t0 = None
+        try:
+            while self._revoking[idx]:
+                if t0 is None:
+                    t0 = time.monotonic_ns()
+                    if _TR.enabled:
+                        _TR.emit("lock", "park", lane=idx, who=who)
+                self._c_parks.add(1)
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not park.wait(timeout=remaining):
+                    if not self._revoking[idx]:
+                        return        # gate closed exactly at the deadline
+                    raise DrainTimeout(
+                        f"{who}: revocation drain still in flight on lane "
+                        f"{idx} (lock value {int(self._vals[idx])}) after "
+                        f"parking past the deadline",
+                        lock_id=int(self._vals[idx]), idx=idx)
+        finally:
+            if t0 is not None:
+                self._h_drain_wait.observe(time.monotonic_ns() - t0)
+                if _TR.enabled:
+                    _TR.emit_span("lock", "unpark", t0, lane=idx, who=who)
 
     def _wake_parked(self, idx: int) -> None:
         """Notify lane ``idx``'s parking slot (caller holds ``self._mu``).
@@ -330,6 +395,8 @@ class BravoRegistry:
             self._park_until_idle(h.idx, deadline, f"free({h.name})")
             h.closed = True
             idx = h.idx
+            if _TR.enabled:
+                _TR.emit("lock", "free", lane=idx, lock_id=h.lock_id)
             i = jnp.asarray(idx, jnp.int32)
             self.rbias = _programs().scatter(self.rbias, i, self._zero)
             self.lock_vals = _programs().scatter(self.lock_vals, i,
@@ -362,7 +429,12 @@ class BravoRegistry:
             self.table, granted = _programs().acquire(
                 self.table, self.rbias, reader_ids, h._lh, h._ll,
                 h._idx, h._val)
-            self.publishes += 1
+            self._c_publishes.add(1)
+            if _TR.enabled:
+                _TR.emit("lock", "publish", lock=h.name,
+                         batch=int(reader_ids.size))
+                self._dev_denied = _programs().fold_denied(
+                    self._dev_denied, granted)
         return granted
 
     def release(self, h: "RegistryHandle", reader_ids: jax.Array,
@@ -387,7 +459,12 @@ class BravoRegistry:
         with self._mu:
             self.table, granted = _programs().acquire_by_index(
                 self.table, self.rbias, self.lock_vals, lock_idx, reader_ids)
-            self.publishes += 1
+            self._c_publishes.add(1)
+            if _TR.enabled:
+                _TR.emit("lock", "publish", lock="by_index",
+                         batch=int(reader_ids.size))
+                self._dev_denied = _programs().fold_denied(
+                    self._dev_denied, granted)
         return granted
 
     def release_by_index(self, lock_idx: jax.Array, reader_ids: jax.Array,
@@ -425,6 +502,8 @@ class BravoRegistry:
             self._armed[idx] = False
             self._revoking[idx] += 1
             self.revocations[idx] += 1
+            if _TR.enabled:
+                _TR.emit("lock", "revoke_begin", lock=h.name, lane=idx)
 
         def poll_live(lid):
             # dispatch under the mutex: the scan is ordered on the current
@@ -446,8 +525,12 @@ class BravoRegistry:
                                pipeline_depth=pipeline_depth)
             except DrainTimeout as e:
                 now = time.monotonic_ns()
+                self._h_revocation.observe(now - start)
+                if _TR.enabled:
+                    _TR.emit("lock", "revoke_timeout", lock=h.name,
+                             lane=idx, cost_ns=now - start)
                 with self._mu:
-                    self.drain_timeouts += 1
+                    self._c_drain_timeouts.add(1)
                     self._scrub_stuck_lane(h)
                     # a timed-out drain is still a (pathological) measured
                     # revocation cost: stamp the inhibit window so a
@@ -459,6 +542,10 @@ class BravoRegistry:
                 e.idx = idx
                 raise
             now = time.monotonic_ns()
+            self._h_revocation.observe(now - start)
+            if _TR.enabled:
+                _TR.emit_span("lock", "revoke_drain", start, lock=h.name,
+                              lane=idx, scans=scans)
             with self._mu:
                 ewma, window = adaptive_inhibit(
                     int(self.revoke_ewma_ns[idx]), now - start, n)
@@ -492,7 +579,10 @@ class BravoRegistry:
         h._lh, h._ll = _lock_limbs(new_val)
         h._val = jnp.asarray(new_val, jnp.int32)
         h.gen += 1
-        self.lane_scrubs += 1
+        self._c_lane_scrubs.add(1)
+        if _TR.enabled:
+            _TR.emit("lock", "lane_scrub", lock=h.name, lane=idx)
+            _TR.emit("lock", "gen_bump", lock=h.name, lane=idx, gen=h.gen)
 
     def rearm(self, h: "RegistryHandle") -> bool:
         """Re-arm ``h``'s bias iff ITS drain count is zero and ITS inhibit
@@ -510,6 +600,8 @@ class BravoRegistry:
                 self.rbias = _programs().scatter(self.rbias, h._idx,
                                                  self._one)
                 self._armed[idx] = True
+                if _TR.enabled:
+                    _TR.emit("lock", "rearm", lock=h.name, lane=idx)
                 return True
         return False
 
@@ -539,7 +631,10 @@ class BravoRegistry:
                     "drain_timeouts": self.drain_timeouts,
                     "lane_scrubs": self.lane_scrubs,
                     "armed": int(self._armed.sum()),
-                    "rbias_armed": int(jnp.sum(self.rbias))}
+                    "rbias_armed": int(jnp.sum(self.rbias)),
+                    # harvest of the device-resident fold (only while
+                    # tracing was enabled; zero otherwise)
+                    "denied_publishes": int(self._dev_denied)}
 
 
 # ---------------------------------------------------------------------------

@@ -41,6 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import TRACER as _TR
+from ..obs.trace import format_timeline
 from .checkpoint import CheckpointCorrupt, save_checkpoint
 from .straggler import StragglerDetector
 
@@ -82,6 +84,9 @@ class DelayedRelease(LeaseProxy):
     def release(self, reader_ids, granted=None):
         n = object.__getattribute__(self, "_n")
         d = object.__getattribute__(self, "_delays")
+        if _TR.enabled:
+            _TR.emit("fault", "delayed_ack",
+                     delay_us=round(float(d[n[0] % len(d)]) * 1e6))
         time.sleep(float(d[n[0] % len(d)]))
         n[0] += 1
         return object.__getattribute__(self, "_inner").release(
@@ -181,6 +186,8 @@ def _fault_dropped_revoke_ack(cfg, params, rng, golden):
     def mid():
         rid = jnp.asarray([int(rng.integers(900, 1000))], jnp.int32)
         (host_tok, granted, _gen), _, _ = eng.store.read_batch(rid)
+        if _TR.enabled:
+            _TR.emit("fault", "dropped_ack", rid=int(np.asarray(rid)[0]))
         # drop the device ack: release ONLY the host lock
         eng.store.lock.release_read(host_tok)
         assert granted is not None
@@ -209,6 +216,9 @@ def _fault_stalled_reader(cfg, params, rng, golden):
     def mid():
         eng.store.leases.rearm()
         granted = eng.store.leases.acquire(stall_rid)
+        if _TR.enabled:
+            _TR.emit("fault", "stalled_reader",
+                     rid=int(np.asarray(stall_rid)[0]))
         assert int(np.asarray(granted)[0]) == 1, "stall must win its lease"
         old_gen = eng.store.leases.gen
         ok = eng.hot_swap(params)
@@ -235,6 +245,8 @@ def _fault_straggler_tick(cfg, params, rng, golden):
     det = StragglerDetector(hosts=4, slow_factor=2.0)
     base = rng.uniform(8.0, 12.0, size=(4, 32))
     base[3] *= 6.0                           # host 3 straggles
+    if _TR.enabled:
+        _TR.emit("fault", "straggler_tick", host=3)
     for step in range(32):
         for h in range(4):
             det.heartbeat(h, float(base[h, step]))
@@ -255,10 +267,14 @@ def _fault_pool_exhaustion(cfg, params, rng, golden):
     steal = int(rng.integers(48, 58))        # of 64: leaves ~1-4 slots' worth
 
     def mid():
+        if _TR.enabled:
+            _TR.emit("fault", "steal_pages", rid=fake_rid, n=steal)
         got = eng.pages.allocate(fake_rid, steal)
         assert len(got) == steal
         time.sleep(float(rng.uniform(0.2, 0.4)))
         eng.pages.reclaim(fake_rid)
+        if _TR.enabled:
+            _TR.emit("fault", "return_pages", rid=fake_rid, n=steal)
 
     toks = _serve(eng, _prompts(), mid=mid)
     eng.stop()
@@ -284,6 +300,8 @@ def _fault_corrupt_checkpoint(cfg, params, rng, golden, tmp="/tmp"):
         leaf = int(rng.integers(0, len(manifest["leaves"])))
         manifest["leaves"][leaf]["crc32"] ^= 0x5A5A5A5A
         mf.write_text(json.dumps(manifest))
+        if _TR.enabled:
+            _TR.emit("fault", "corrupt_checkpoint", leaf=leaf)
 
         def mid():
             epoch_before = eng.store.epoch
@@ -313,6 +331,8 @@ def _fault_thread_crash(cfg, params, rng, golden):
     boom = RuntimeError("injected: updater crash")
 
     def bad_perturb(p):
+        if _TR.enabled:
+            _TR.emit("fault", "thread_crash", error=str(boom))
         raise boom
 
     toks = _serve(eng, _prompts(),
@@ -370,11 +390,38 @@ def run_fault(fault: str, seed: int, cfg=None, params=None,
     rng = np.random.default_rng(seed * 1000 + FAULTS.index(fault))
     if golden is None:
         golden = golden_run(cfg, params)
-    toks, checks = _RUNNERS[fault](cfg, params, rng, golden)
+    # Trace the whole fault run: clear the ring so the timeline we dump on
+    # failure covers exactly this injection, and restore the caller's
+    # tracer state afterwards.
+    was_enabled = _TR.enabled
+    _TR.clear()
+    _TR.enable()
+    _TR.emit("fault", "inject", fault=fault, seed=seed)
+    try:
+        toks, checks = _RUNNERS[fault](cfg, params, rng, golden)
+    except BaseException:
+        _dump_timeline(fault)
+        raise
+    finally:
+        if not was_enabled:
+            _TR.disable()
     checks["tokens_exact"] = toks == golden
     checks["ok"] = all(bool(v) for k, v in checks.items()
                        if isinstance(v, bool))
+    if not checks["ok"]:
+        _dump_timeline(fault)
     return {"fault": fault, "seed": seed, **checks}
+
+
+def _dump_timeline(fault: str, limit: int = 200) -> None:
+    """On any fault-matrix failure, print the per-request / per-lock event
+    timeline so the failure is debuggable from CI logs alone."""
+    events = _TR.snapshot()
+    print(f"--- obs timeline for failed fault {fault!r} "
+          f"(last {min(limit, len(events))} of {len(events)} events) ---",
+          file=sys.stderr)
+    print(format_timeline(events[-limit:]), file=sys.stderr)
+    print("--- end obs timeline ---", file=sys.stderr, flush=True)
 
 
 def run_matrix(seed: int, faults: Optional[List[str]] = None) -> List[dict]:

@@ -50,7 +50,6 @@ tokens come back.
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import queue
 import threading
@@ -68,6 +67,8 @@ from ..core.factory import LockEnv
 from ..core.registry import BravoRegistry, RegistryHandle
 from ..models import model as M
 from ..models.common import ModelConfig
+from ..obs import TRACER as _TR
+from ..obs.metrics import MetricsRegistry
 from .kv_pool import KVPool, page_keys
 from .scheduler import Phase, Scheduler, SchedulerConfig, SlotState
 from .steps import (jit_step, make_decode_step, make_paged_prefill_step,
@@ -91,6 +92,8 @@ class EngineConfig:
     drain_max_wait_s: float = 5.0   # bounded-drain deadline (DrainTimeout)
     swap_retries: int = 3           # hot_swap attempts after a DrainTimeout
     swap_backoff_s: float = 0.05    # base backoff between attempts (doubles)
+    obs_warmup_steps: int = 2       # decode steps excluded from the step-
+    #                                 latency histogram (compile outliers)
 
 
 class EngineFailure(RuntimeError):
@@ -116,21 +119,50 @@ class Request:
         default_factory=threading.Event)
 
 
-@dataclasses.dataclass
-class EngineStats:
-    decode_steps: int = 0
-    tokens_out: int = 0
-    prefills: int = 0
-    weight_swaps: int = 0
-    swap_retries: int = 0      # hot_swap attempts that hit a DrainTimeout
-    swap_failures: int = 0     # hot_swaps abandoned after all retries
-    compactions: int = 0
-    read_acquires: int = 0
+_ENGINE_COUNTERS = (
+    "decode_steps",
+    "tokens_out",
+    "prefills",
+    "weight_swaps",
+    "swap_retries",     # hot_swap attempts that hit a DrainTimeout
+    "swap_failures",    # hot_swaps abandoned after all retries
+    "compactions",
+    "read_acquires",
     # prefix-cache accounting (scheduler mode)
-    pages_charged: int = 0     # pages actually allocated at admission
-    pages_saved: int = 0       # prompt pages served by shared reference
-    cow_copies: int = 0        # partial-page divergences copied on write
-    cached_tokens: int = 0     # prompt tokens whose prefill was skipped
+    "pages_charged",    # pages actually allocated at admission
+    "pages_saved",      # prompt pages served by shared reference
+    "cow_copies",       # partial-page divergences copied on write
+    "cached_tokens",    # prompt tokens whose prefill was skipped
+)
+
+
+class EngineStats:
+    """Attribute view over the engine's ``engine.*`` metrics counters.
+
+    PR 8 folded the old stats dataclass (and its dedicated mutex) into the
+    metrics registry: writes go through :meth:`inc` — a lock-free
+    per-thread cell add — and attribute reads (``stats.decode_steps``)
+    aggregate the cells, keeping every existing call site working."""
+
+    def __init__(self, metrics: MetricsRegistry):
+        object.__setattr__(self, "_c", {
+            n: metrics.counter(f"engine.{n}") for n in _ENGINE_COUNTERS})
+
+    def inc(self, name: str, n: int = 1) -> None:
+        self._c[name].add(n)
+
+    def __getattr__(self, name: str) -> int:
+        try:
+            return self.__dict__["_c"][name].value
+        except KeyError:
+            raise AttributeError(name) from None
+
+    def __setattr__(self, name, value):
+        raise AttributeError(
+            "EngineStats is a metrics view: use inc(name, n) to count")
+
+    def asdict(self) -> Dict[str, int]:
+        return {n: c.value for n, c in self._c.items()}
 
 
 class ModelStore:
@@ -413,6 +445,10 @@ class ServingEngine:
         self.mesh = mesh
         self.rules = rules
         self.env = env or LockEnv(LiveMem())
+        # ONE metrics registry for the whole serving plane: the engine,
+        # its lock registry and its KV pool share the namespace, so a
+        # snapshot() is the full picture and tests never cross-contaminate
+        self.metrics = MetricsRegistry()
         self.registry: Optional[BravoRegistry] = None
         self.kv_pool: Optional[KVPool] = None
         model_h = pool = None
@@ -421,10 +457,11 @@ class ServingEngine:
             # device lock in the address space (the paper's economy); each
             # guarded resource gets its own bias lane, so a weight swap's
             # revocation never flaps the page locks' fast path
-            self.registry = BravoRegistry()
+            self.registry = BravoRegistry(metrics=self.metrics)
             model_h = self.registry.alloc(name="model")
             self.kv_pool = pool = KVPool(n_pages, registry=self.registry,
-                                         stripes=kv_stripes)
+                                         stripes=kv_stripes,
+                                         metrics=self.metrics)
         self.store = ModelStore(params, self.env.make(lock_name),
                                 leases=model_h)
         self.pages = PageTable(n_pages, self.env.make(lock_name), pool=pool)
@@ -432,8 +469,10 @@ class ServingEngine:
         self.handlers = handlers
         self.max_seq = max_seq
         self.slots = slots_per_handler
-        self.stats = EngineStats()
-        self._stats_lock = threading.Lock()
+        self.stats = EngineStats(self.metrics)
+        self._h_step = self.metrics.histogram("engine.step_ns")
+        self._h_swap = self.metrics.histogram("engine.swap_ns")
+        self._g_queue = self.metrics.gauge("engine.queue_depth")
         self.inq: "queue.Queue[Optional[Request]]" = queue.Queue()
         self._threads: List[threading.Thread] = []
         self._stop = threading.Event()
@@ -481,8 +520,10 @@ class ServingEngine:
                 donate_argnums=(0,))
             self._free_est = n_pages        # host mirror of pool pressure
             self._compact_req = False
-            self.step_ns: "collections.deque[int]" = collections.deque(
-                maxlen=4096)
+            # decode steps seen so far: the first obs_warmup_steps stay
+            # out of the latency histogram (compile-time outliers would
+            # dominate p99 for the whole run)
+            self._steps_seen = 0
 
     # ------------------------------------------------------------- handlers
     def _handler(self, hid: int) -> None:
@@ -527,8 +568,7 @@ class ServingEngine:
             last_logits, _ = self._prefill(params, {"tokens": jnp.asarray(toks)})
         finally:
             self.store.done_read_batch(tok, rid_dev)
-        with self._stats_lock:
-            self.stats.prefills += 1
+        self.stats.inc("prefills")
 
         caches = M.init_caches(cfg, B, maxlen, dtype=jnp.bfloat16)
         # re-run prompt through decode steps to fill caches (simple engine;
@@ -551,9 +591,8 @@ class ServingEngine:
                     self.store.done_read_batch(rtok, rid_dev)
             finally:
                 self.pages.done_read_batch(ptok)
-            with self._stats_lock:
-                self.stats.decode_steps += 1
-                self.stats.read_acquires += 1
+            self.stats.inc("decode_steps")
+            self.stats.inc("read_acquires")
             if step + 1 < S:
                 cur = jnp.asarray(toks[:, step + 1:step + 2])
             else:
@@ -566,8 +605,7 @@ class ServingEngine:
             r.out = np.asarray(outs[i], np.int32)
             self.pages.reclaim(r.rid)
             r.done.set()
-        with self._stats_lock:
-            self.stats.tokens_out += sum(len(o) for o in outs)
+        self.stats.inc("tokens_out", sum(len(o) for o in outs))
 
     # ----------------------------------------------- scheduler mode (PR 4)
     def _submit_slot(self, r: Request) -> None:
@@ -622,12 +660,16 @@ class ServingEngine:
         self._free_est += self._release_slot_pages(st)
         self.scheduler.evict(st)
         self._clear_row(row)
+        if _TR.enabled:
+            _TR.emit("req", "evict", rid=st.rid)
 
     def _finish(self, st: SlotState) -> None:
         row = st.row
         self._free_est += self._release_slot_pages(st)
         self.scheduler.finish(st)
         self._clear_row(row)
+        if _TR.enabled:
+            _TR.emit("req", "done", rid=st.rid, tokens=len(st.out))
         r = st.request
         if r is not None:
             r.out = np.asarray(st.out, np.int32)
@@ -733,11 +775,15 @@ class ServingEngine:
         st.prefill_pos = st.pos = cov     # chunked prefill resumes here
         self._rids = self._rids.at[st.row].set(st.rid)
         self._bind_pages(st, refs + pages, charged=len(pages) + revived)
-        with self._stats_lock:
-            self.stats.pages_charged += len(pages)
-            self.stats.pages_saved += k_ref
-            self.stats.cow_copies += int(cow)
-            self.stats.cached_tokens += cov
+        self.stats.inc("pages_charged", len(pages))
+        self.stats.inc("pages_saved", k_ref)
+        self.stats.inc("cow_copies", int(cow))
+        self.stats.inc("cached_tokens", cov)
+        if _TR.enabled:
+            _TR.emit("req", "admit", rid=st.rid, cached=cov,
+                     pages=len(pages), shared=k_ref)
+            if cow:
+                _TR.emit("pool", "cow_copy", rid=st.rid)
         return True
 
     def _admit(self) -> None:
@@ -799,6 +845,7 @@ class ServingEngine:
             rids[i] = st.rid
         rid_dev = jnp.asarray(rids)
         args = map(jnp.asarray, (toks, clens, newls, ptbl))
+        t0 = time.monotonic_ns()
         ptok, _ = self.pages.read_batch(rid_dev)
         try:
             rtok, params, _ = self.store.read_batch(rid_dev)
@@ -810,6 +857,12 @@ class ServingEngine:
         finally:
             self.pages.done_read_batch(ptok)
         nxt_h = np.asarray(nxt)
+        if _TR.enabled:
+            _TR.emit_span("engine", "prefill_step", t0,
+                          rows=len(plan.slots))
+            for st, chunk in zip(plan.slots, plan.chunks):
+                _TR.emit("req", "prefill_chunk", rid=st.rid, chunk=chunk,
+                         pos=st.prefill_pos)
         done: List[SlotState] = []
         first_toks = 0
         for i, (st, chunk) in enumerate(zip(plan.slots, plan.chunks)):
@@ -822,14 +875,15 @@ class ServingEngine:
                 self._cur = self._cur.at[row, 0].set(tok)
                 self._clen = self._clen.at[row].set(st.pos + 1)
                 self._active = self._active.at[row].set(1)
+                if _TR.enabled:
+                    _TR.emit("req", "first_token", rid=st.rid)
                 if self.scheduler.on_token(st, tok):
                     done.append(st)     # max_new == 1
         for st in done:
             self._finish(st)
-        with self._stats_lock:
-            self.stats.prefills += 1
-            self.stats.read_acquires += 1
-            self.stats.tokens_out += first_toks
+        self.stats.inc("prefills")
+        self.stats.inc("read_acquires")
+        self.stats.inc("tokens_out", first_toks)
 
     def _run_decode(self, plan) -> None:
         """One decode tick over every DECODE row: grow pages first (with
@@ -860,26 +914,33 @@ class ServingEngine:
         self._cur = nxt
         self._clen = self._bump(self._clen, self._active)
         toks = np.asarray(nxt)[:, 0]     # the data-plane output sync
-        self.step_ns.append(time.monotonic_ns() - t0)
+        dt = time.monotonic_ns() - t0
+        self._steps_seen += 1
+        if self._steps_seen > self.ecfg.obs_warmup_steps:
+            self._h_step.observe(dt)
+        if _TR.enabled:
+            _TR.emit_span("engine", "decode_step", t0, dur_ns=dt,
+                          batch=len(slots))
         done = [st for st in slots
                 if self.scheduler.on_token(st, int(toks[st.row]))]
         for st in done:
             self._finish(st)
-        with self._stats_lock:
-            self.stats.decode_steps += 1
-            self.stats.read_acquires += 1
-            self.stats.tokens_out += len(slots)
+        self.stats.inc("decode_steps")
+        self.stats.inc("read_acquires")
+        self.stats.inc("tokens_out", len(slots))
 
     def _schedule_tick(self) -> bool:
         """One policy round: service compaction, admit, run the plan.
         Returns False when idle (the loop then blocks on the queue)."""
         self._drain_inq()
+        self._g_queue.set(len(self.scheduler.waiting))
         if self._compact_req:
             self._compact_req = False
             live = [s.rid for s in self.scheduler.running.values()]
             self._free_est += self.pages.compact(live=live)
-            with self._stats_lock:
-                self.stats.compactions += 1
+            self.stats.inc("compactions")
+            if _TR.enabled:
+                _TR.emit("engine", "compact")
         self._admit()
         plan = self.scheduler.plan()
         if plan.kind == "prefill":
@@ -914,8 +975,7 @@ class ServingEngine:
                 self._compact_req = True
             else:
                 self.pages.compact()
-                with self._stats_lock:
-                    self.stats.compactions += 1
+                self.stats.inc("compactions")
 
     # ---------------------------------------------------- hot swap (PR 7)
     def stage_checkpoint(self, directory, step: int):
@@ -926,6 +986,8 @@ class ServingEngine:
         lock is taken or epoch swapped.  No lock is held: staging runs
         entirely beside the decode fast path."""
         from ..ft.checkpoint import load_checkpoint
+        if _TR.enabled:
+            _TR.emit("engine", "swap_stage", step=step)
         return load_checkpoint(directory, step, like=self.store.params,
                                verify=True)
 
@@ -953,24 +1015,31 @@ class ServingEngine:
         retries = ecfg.swap_retries if retries is None else retries
         backoff = ecfg.swap_backoff_s if backoff_s is None else backoff_s
         for attempt in range(retries + 1):
+            t0 = time.monotonic_ns()
             try:
                 self.store.swap(new_params,
                                 wait_poll_s=ecfg.drain_wait_poll_s,
                                 max_wait_s=ecfg.drain_max_wait_s)
             except DrainTimeout:
-                with self._stats_lock:
-                    self.stats.swap_retries += 1
+                self.stats.inc("swap_retries")
                 if attempt == retries:
-                    with self._stats_lock:
-                        self.stats.swap_failures += 1
+                    self.stats.inc("swap_failures")
+                    if _TR.enabled:
+                        _TR.emit("engine", "swap_abandon", attempt=attempt)
                     self._degraded.clear()   # abandoned: keep serving the
                     return False             # old epoch, readmit traffic
+                if _TR.enabled:
+                    _TR.emit("engine", "swap_degrade", attempt=attempt)
                 self._degraded.set()
                 self._stop.wait(backoff * (2 ** attempt))
             else:
                 self._degraded.clear()
-                with self._stats_lock:
-                    self.stats.weight_swaps += 1
+                self.stats.inc("weight_swaps")
+                self._h_swap.observe(time.monotonic_ns() - t0)
+                if _TR.enabled:
+                    _TR.emit_span("engine", "swap_land", t0,
+                                  attempt=attempt,
+                                  epoch=self.store.epoch)
                 return True
         return False                         # unreachable; keeps mypy calm
 
@@ -983,6 +1052,9 @@ class ServingEngine:
             try:
                 target(*args)
             except BaseException as e:
+                if _TR.enabled:
+                    _TR.emit("engine", "worker_crash", thread=name,
+                             error=type(e).__name__)
                 snap = None
                 try:
                     if self.scheduler is not None:
@@ -1017,6 +1089,9 @@ class ServingEngine:
                 f"request {req.rid}: prompt {len(req.prompt)} + max_new "
                 f"{req.max_new} exceeds scheduler max_seq "
                 f"{self.sched_cfg.max_seq}")
+        if _TR.enabled:
+            _TR.emit("req", "submit", rid=req.rid,
+                     prompt=len(req.prompt), max_new=req.max_new)
         self.inq.put(req)
 
     def check_health(self) -> None:
@@ -1038,7 +1113,7 @@ class ServingEngine:
         self.check_health()
 
     def lock_stats(self) -> Dict[str, Any]:
-        out: Dict[str, Any] = {"engine": dataclasses.asdict(self.stats)}
+        out: Dict[str, Any] = {"engine": self.stats.asdict()}
         for name, lk in (("model", self.store.lock),
                          ("pages", self.pages.lock)):
             st = getattr(lk, "stats", None)
@@ -1049,10 +1124,13 @@ class ServingEngine:
             out["kv_pool"] = self.kv_pool.stats()
         if self.scheduler is not None:
             out["scheduler"] = self.scheduler.stats()
-            lat = np.asarray(self.step_ns, np.float64)
-            if lat.size:
+            if self._h_step.count:
                 out["scheduler"]["decode_p50_us"] = round(
-                    float(np.percentile(lat, 50)) / 1e3, 2)
+                    self._h_step.quantile(0.50) / 1e3, 2)
                 out["scheduler"]["decode_p99_us"] = round(
-                    float(np.percentile(lat, 99)) / 1e3, 2)
+                    self._h_step.quantile(0.99) / 1e3, 2)
+        # the whole serving plane's metrics in one namespace (engine.*,
+        # registry.*, pool.*) — the scattered per-subsystem stats dicts
+        # above remain as compatibility views
+        out["metrics"] = self.metrics.snapshot()
         return out

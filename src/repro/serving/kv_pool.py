@@ -101,6 +101,8 @@ import numpy as np
 from ..core.errors import ProtocolError
 from ..core.registry import BravoRegistry
 from ..kernels.hash import _K1, _K2, _K3
+from ..obs import TRACER as _TR
+from ..obs.metrics import MetricsRegistry
 
 __all__ = ["KVPool", "FREE", "page_keys", "PREFIX_SEED"]
 
@@ -330,6 +332,13 @@ def _shared_stats_impl(owner, map_pg):
             jnp.sum((map_pg >= 0).astype(jnp.int32)))
 
 
+def _fold_hits_impl(acc, pages):
+    """Fold a prefix acquisition's hit-page count into a device scalar:
+    the per-tick dedup-hit counter stays device-resident (dispatch-only
+    add) and is harvested only by the synchronizing ``stats()``."""
+    return acc + jnp.sum((pages >= 0).astype(jnp.int32))
+
+
 class _Programs(NamedTuple):
     alloc: object           # donates owner + map_pg
     reclaim: object
@@ -344,6 +353,7 @@ class _Programs(NamedTuple):
     orphan_plan: object     # static stripes
     scrub: object
     shared_stats: object
+    fold_hits: object       # donates the accumulator scalar
 
 
 @functools.lru_cache(maxsize=None)
@@ -365,7 +375,8 @@ def _programs() -> _Programs:
         orphan_plan=jax.jit(_orphan_plan_impl,
                             static_argnames=("stripes",)),
         scrub=jit_donating(_scrub_impl, 1),
-        shared_stats=jax.jit(_shared_stats_impl))
+        shared_stats=jax.jit(_shared_stats_impl),
+        fold_hits=jit_donating(_fold_hits_impl, 1))
 
 
 class KVPool:
@@ -379,7 +390,8 @@ class KVPool:
     which the property tests exploit)."""
 
     def __init__(self, n_pages: int, registry: Optional[BravoRegistry] = None,
-                 stripes: int = 4, map_slots: int = 0):
+                 stripes: int = 4, map_slots: int = 0,
+                 metrics: Optional[MetricsRegistry] = None):
         if stripes < 1:
             raise ProtocolError(
                 f"KVPool needs at least one lock stripe, got {stripes}")
@@ -409,12 +421,47 @@ class KVPool:
         # slot's admission peek instead of re-syncing a device match on
         # every tick the slot stays blocked at the watermark
         self.version = 0
-        self.lookups = 0
-        self.allocates = 0
-        self.reclaims = 0
-        self.prefix_lookups = 0
-        self.prefix_hits = 0        # lookups that matched >= 1 page
-        self.prefix_inserts = 0
+        # counters live on the shared metrics registry (defaulting to the
+        # lock registry's, so a standalone pool and its stripes snapshot
+        # as one namespace); properties keep the old attribute API
+        self.metrics = (metrics if metrics is not None
+                        else self.registry.metrics)
+        self._c_lookups = self.metrics.counter("pool.lookups")
+        self._c_allocates = self.metrics.counter("pool.allocates")
+        self._c_reclaims = self.metrics.counter("pool.reclaims")
+        self._c_prefix_lookups = self.metrics.counter("pool.prefix_lookups")
+        # lookups that matched >= 1 page
+        self._c_prefix_hits = self.metrics.counter("pool.prefix_hits")
+        self._c_prefix_inserts = self.metrics.counter("pool.prefix_inserts")
+        # device-resident dedup-hit accumulator: folded in-graph on every
+        # traced prefix acquisition, harvested only in stats()
+        self._dev_hits = jnp.zeros((), jnp.int32)
+
+    # counter attribute compatibility (reads only; writes go through the
+    # metrics registry so per-thread cells keep increments lock-free)
+    @property
+    def lookups(self) -> int:
+        return self._c_lookups.value
+
+    @property
+    def allocates(self) -> int:
+        return self._c_allocates.value
+
+    @property
+    def reclaims(self) -> int:
+        return self._c_reclaims.value
+
+    @property
+    def prefix_lookups(self) -> int:
+        return self._c_prefix_lookups.value
+
+    @property
+    def prefix_hits(self) -> int:
+        return self._c_prefix_hits.value
+
+    @property
+    def prefix_inserts(self) -> int:
+        return self._c_prefix_inserts.value
 
     def _stripe(self, rid: int):
         return self.locks[rid % self.stripes]
@@ -434,7 +481,7 @@ class KVPool:
             with self._mu:
                 mask = _programs().mask(self.owner,
                                         jnp.asarray(rid, jnp.int32))
-                self.lookups += 1
+                self._c_lookups.add(1)
             return list(np.where(np.asarray(mask))[0])
         finally:
             h.release(ids, granted=granted)
@@ -455,7 +502,7 @@ class KVPool:
         try:
             with self._mu:
                 mask = _programs().mask_batch(self.owner, rids)
-                self.lookups += 1
+                self._c_lookups.add(1)
         except BaseException:         # never leak published leases
             self.registry.release_by_index(lidx, rids, granted)
             raise
@@ -490,8 +537,10 @@ class KVPool:
                 jnp.asarray(n, jnp.int32))
             self.owner = owner
             self._map_pg = map_pg
-            self.allocates += 1
+            self._c_allocates.add(1)
             self.version += 1
+        if _TR.enabled:
+            _TR.emit("pool", "alloc", rid=rid, n=n)
         return take, ok
 
     @staticmethod
@@ -518,8 +567,10 @@ class KVPool:
             owner, cnt = _programs().reclaim(self.owner,
                                              jnp.asarray(rid, jnp.int32))
             self.owner = owner
-            self.reclaims += 1
+            self._c_reclaims.add(1)
             self.version += 1
+        if _TR.enabled:
+            _TR.emit("pool", "reclaim", rid=rid)
         return cnt
 
     def reclaim(self, rid: int, **revoke_kw) -> int:
@@ -536,10 +587,12 @@ class KVPool:
                 self.owner, self._map_kh, self._map_kl, self._map_pg,
                 self._map_ln, jnp.asarray(kh), jnp.asarray(kl),
                 jnp.asarray(ln))
-            self.prefix_lookups += 1
+            self._c_prefix_lookups.add(1)
         n = int(n_run)                # sync OUTSIDE the mutex: a writer's
         if n > 0:                     # dispatch must never queue behind a
-            self.prefix_hits += 1     # reader's host round-trip
+            self._c_prefix_hits.add(1)  # reader's host round-trip
+        if _TR.enabled:
+            _TR.emit("pool", "dedup_hit" if n > 0 else "dedup_miss", run=n)
         return np.asarray(pages).tolist(), n, np.asarray(free_hit).tolist()
 
     def acquire_prefix_async(self, kh, kl, ln, take):
@@ -555,6 +608,13 @@ class KVPool:
                 jnp.asarray(ln), jnp.asarray(take))
             self.owner = owner
             self.version += 1
+            if _TR.enabled:
+                # device-resident fold: counts the hit pages in-graph,
+                # nothing crosses the host boundary on this path
+                self._dev_hits = _programs().fold_hits(self._dev_hits,
+                                                       pages)
+        if _TR.enabled:
+            _TR.emit("pool", "ref_acquire")
         return pages, revived
 
     @staticmethod
@@ -579,8 +639,10 @@ class KVPool:
             self.owner = owner
             self._map_kh, self._map_kl = mkh, mkl
             self._map_pg, self._map_ln = mpg, mln
-            self.prefix_inserts += 1
+            self._c_prefix_inserts.add(1)
             self.version += 1
+        if _TR.enabled:
+            _TR.emit("pool", "prefix_insert", rid=rid)
         return ins
 
     def insert_prefix(self, rid: int, kh, kl, ln, lane_pages) -> List[bool]:
@@ -596,6 +658,8 @@ class KVPool:
                 self.owner, jnp.asarray(pages, jnp.int32))
             self.owner = owner
             self.version += 1
+        if _TR.enabled:
+            _TR.emit("pool", "ref_release")
         return freed
 
     def release_refs(self, pages) -> int:
@@ -625,8 +689,10 @@ class KVPool:
         with self._mu:
             owner, cnt = _programs().scrub(self.owner, live)
             self.owner = owner
-            self.reclaims += 1
+            self._c_reclaims.add(1)
             self.version += 1
+        if _TR.enabled:
+            _TR.emit("pool", "orphan_scrub")
         return cnt
 
     # ---------------------------------------------------------------- misc
@@ -650,4 +716,7 @@ class KVPool:
                 "cached_entries": entries, "map_slots": self.map_slots,
                 "prefix_lookups": self.prefix_lookups,
                 "prefix_hits": self.prefix_hits,
-                "prefix_inserts": self.prefix_inserts}
+                "prefix_inserts": self.prefix_inserts,
+                # harvest of the device-resident fold (counts only while
+                # tracing was enabled; zero otherwise)
+                "dedup_pages_hit": int(self._dev_hits)}

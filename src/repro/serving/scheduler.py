@@ -48,6 +48,8 @@ from typing import Any, Deque, Dict, List, Optional
 
 import numpy as np
 
+from ..obs import TRACER as _TR
+
 __all__ = ["Phase", "SlotState", "SchedulerConfig", "Plan", "Scheduler"]
 
 
@@ -153,6 +155,9 @@ class Scheduler:
                 f"{st.max_new} exceeds max_seq {self.cfg.max_seq}")
         st.phase = Phase.WAITING
         self.waiting.append(st)
+        if _TR.enabled:
+            _TR.emit("sched", "submit", rid=st.rid, prompt=st.n_prefix,
+                     max_new=st.max_new)
 
     def admit(self, free_pages: int, need_fn=None) -> List[SlotState]:
         """Admission control: move WAITING slots to PREFILL while a batch
@@ -180,6 +185,9 @@ class Scheduler:
             self.admissions += 1
             free_pages -= need
             admitted.append(st)
+            if _TR.enabled:
+                _TR.emit("sched", "admit", rid=st.rid, row=st.row,
+                         need=need)
         return admitted
 
     def defer(self, st: SlotState) -> None:
@@ -191,6 +199,8 @@ class Scheduler:
         st.cached_pos = 0
         st.phase = Phase.WAITING
         self.waiting.appendleft(st)
+        if _TR.enabled:
+            _TR.emit("sched", "defer", rid=st.rid)
 
     def _release_row(self, st: SlotState) -> None:
         self.running.pop(st.row, None)
@@ -258,6 +268,8 @@ class Scheduler:
         st.phase = Phase.DONE
         st.pages = []
         self.finished += 1
+        if _TR.enabled:
+            _TR.emit("sched", "finish", rid=st.rid, tokens=len(st.out))
 
     # ------------------------------------------------------------ preemption
     def pick_victim(self, exclude: Optional[SlotState] = None
@@ -287,6 +299,8 @@ class Scheduler:
         st.evictions += 1            # moves it (back) to PREFILL
         self.evictions += 1
         self.waiting.appendleft(st)
+        if _TR.enabled:
+            _TR.emit("sched", "evict", rid=st.rid, n=st.evictions)
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> dict:

@@ -169,6 +169,34 @@ def test_host_sync_in_lease_window():
     assert [f.rule for f in fs2] == ["host-sync-in-lease-window"]
 
 
+def test_obs_in_lease_window():
+    # seeded mutation: an aggregating obs read inside the lease window.
+    # emits are fine; snapshot()/quantile()/format_timeline are not.
+    src = textwrap.dedent("""\
+        def step(self, tok, ids):
+            try:
+                nxt = self._decode(tok)
+                if _TR.enabled:
+                    _TR.emit("engine", "decode_step", batch=4)   # ok
+                self._c_steps.add(1)                             # ok
+                _TR.snapshot()                                   # bad
+                p99 = self.metrics.histogram("engine.step_ns").quantile(0.99)
+                dump = format_timeline(_TR.snapshot())
+            finally:
+                self.store.done_read_batch(tok, ids)
+            snap = self.metrics.snapshot()   # after release: fine
+        """)
+    fs = LS.lint_file("serving/engine.py", src)
+    obs = [f for f in fs if f.rule == "obs-in-lease-window"]
+    # snapshot() at 7, quantile() at 8, format_timeline/_TR.snapshot at 9
+    # (same line — deduped to one finding per (rule, line))
+    lines = sorted(int(f.where.split(":")[1]) for f in obs)
+    assert lines == [7, 8, 9]
+    # rule applies outside engine.py too (any file with a lease window)
+    fs2 = LS.lint_file("serving/kv_pool.py", src)
+    assert [f.rule for f in fs2] == ["obs-in-lease-window"] * 3
+
+
 def test_scheduler_state_mutation():
     src = textwrap.dedent("""\
         class E:

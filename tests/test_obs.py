@@ -1,0 +1,257 @@
+"""Tier-1 tests for the observability substrate (``repro.obs``).
+
+Pure-host tests (the obs layer is stdlib-only by design — no jax
+import): ring wraparound accounting, deterministic multi-thread merge,
+log-bucket histogram quantile accuracy against a numpy reference, the
+Chrome-trace export schema round-trip, and the disabled-path contract
+(no state touched, nothing allocated)."""
+
+from __future__ import annotations
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import chrome
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               N_BUCKETS, bucket_bounds, bucket_index)
+from repro.obs.trace import Tracer, derive_requests, format_timeline
+
+
+# ---------------------------------------------------------------------------
+# tracer: rings, wraparound, determinism, disabled path
+# ---------------------------------------------------------------------------
+
+
+def test_emit_and_snapshot_ordering():
+    tr = Tracer(capacity=64)
+    tr.enable()
+    for i in range(10):
+        tr.emit("lock", "publish", batch=i)
+    evs = tr.snapshot()
+    assert [e.args["batch"] for e in evs] == list(range(10))
+    assert all(e.key == "lock.publish" and e.dur_ns == 0 for e in evs)
+    assert evs == sorted(evs, key=lambda e: (e.ts_ns, e.tid))
+
+
+def test_ring_wraparound_keeps_newest_and_counts_drops():
+    tr = Tracer(capacity=16)          # rounded to a power of two
+    assert tr.capacity == 16
+    tr.enable()
+    for i in range(50):
+        tr.emit("pool", "alloc", i=i)
+    evs = tr.snapshot()
+    assert len(evs) == 16
+    assert [e.args["i"] for e in evs] == list(range(34, 50))   # newest 16
+    assert tr.dropped() == 50 - 16
+
+
+def test_clear_resets_epoch_and_rings():
+    tr = Tracer(capacity=32)
+    tr.enable()
+    tr.emit("req", "submit", rid=1)
+    assert len(tr.snapshot()) == 1
+    tr.clear()
+    assert tr.snapshot() == [] and tr.dropped() == 0
+    tr.emit("req", "submit", rid=2)   # thread lazily re-registers
+    assert [e.args["rid"] for e in tr.snapshot()] == [2]
+
+
+def test_disabled_path_emits_nothing():
+    tr = Tracer(capacity=32)
+    assert not tr.enabled
+    tr.emit("lock", "publish")
+    tr.emit_span("engine", "decode_step", 0, dur_ns=5)
+    with tr.span("engine", "swap"):
+        pass
+    # no ring was even created: the disabled cost is one branch
+    assert tr._rings == []
+    assert tr.snapshot() == []
+
+
+def test_multithread_merge_is_deterministic_and_lossless():
+    tr = Tracer(capacity=4096)
+    tr.enable()
+    n_threads, per_thread = 8, 200
+    barrier = threading.Barrier(n_threads)
+
+    def worker(k):
+        barrier.wait()
+        for i in range(per_thread):
+            tr.emit("lock", "publish", k=k, i=i)
+
+    ts = [threading.Thread(target=worker, args=(k,))
+          for k in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    evs = tr.snapshot()
+    assert len(evs) == n_threads * per_thread and tr.dropped() == 0
+    # per-thread order is preserved in the merge...
+    for k in range(n_threads):
+        mine = [e.args["i"] for e in evs if e.args["k"] == k]
+        assert mine == list(range(per_thread))
+    # ...and the merge itself is a total order: identical on every call
+    assert tr.snapshot() == evs
+
+
+def test_span_and_emit_span():
+    tr = Tracer()
+    tr.enable()
+    tr.emit_span("engine", "swap_land", t0_ns=1000, dur_ns=500, attempt=1)
+    with tr.span("engine", "decode_step", batch=4):
+        pass
+    spans = tr.snapshot()
+    assert spans[0].ts_ns == 1000 and spans[0].dur_ns == 500
+    assert spans[1].dur_ns >= 1 and spans[1].args == {"batch": 4}
+    txt = format_timeline(spans)
+    assert "engine.swap_land" in txt and "dur=" in txt
+
+
+def test_derive_requests_lifecycle():
+    tr = Tracer()
+    tr.enable()
+    tr.emit("req", "submit", rid=7)
+    tr.emit("req", "admit", rid=7, cached=8)
+    tr.emit("req", "prefill_chunk", rid=7)
+    tr.emit("req", "prefill_chunk", rid=7)
+    tr.emit("req", "first_token", rid=7)
+    tr.emit("req", "evict", rid=7)
+    tr.emit("req", "done", rid=7, tokens=5)
+    r = derive_requests(tr.snapshot())[7]
+    assert r["prefill_chunks"] == 2 and r["evictions"] == 1
+    assert r["tokens"] == 5 and r["cached_tokens"] == 8
+    assert r["ttft_ns"] is not None and r["ttft_ns"] >= 0
+    assert r["tpot_ns"] == (r["done_ts"] - r["first_token_ts"]) // 4
+
+
+# ---------------------------------------------------------------------------
+# metrics: counters, histogram accuracy vs numpy
+# ---------------------------------------------------------------------------
+
+
+def test_counter_multithread_exact():
+    c = Counter("x")
+    n_threads, per_thread = 8, 10_000
+
+    def worker():
+        for _ in range(per_thread):
+            c.add()
+
+    ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.value == n_threads * per_thread
+
+
+def test_bucket_index_bounds_roundtrip():
+    for v in list(range(0, 200)) + [2**k + d for k in range(4, 40)
+                                    for d in (-1, 0, 1, 3)]:
+        idx = bucket_index(v)
+        assert 0 <= idx < N_BUCKETS
+        lo, hi = bucket_bounds(idx)
+        assert lo <= v < hi, (v, idx, lo, hi)
+        # relative bucket width <= 1/8 above the exact range
+        if v >= 16:
+            assert (hi - lo) <= lo / 8 + 1
+
+
+@pytest.mark.parametrize("dist", ["uniform", "lognormal", "bimodal"])
+def test_histogram_quantiles_vs_numpy(dist):
+    rng = np.random.default_rng(hash(dist) % 2**32)
+    if dist == "uniform":
+        xs = rng.integers(1, 1_000_000, size=20_000)
+    elif dist == "lognormal":
+        xs = np.maximum(rng.lognormal(10, 2, size=20_000), 1).astype(np.int64)
+    else:
+        # unequal modes so the tested quantiles fall INSIDE a mode — at
+        # the jump itself any interpolation scheme is arbitrary
+        xs = np.concatenate([rng.integers(100, 200, size=8_000),
+                             rng.integers(50_000, 90_000, size=12_000)])
+    h = Histogram("lat")
+    for v in xs:
+        h.observe(int(v))
+    assert h.count == len(xs)
+    assert h.mean == pytest.approx(float(np.mean(xs)))
+    for q in (0.5, 0.9, 0.99):
+        got = h.quantile(q)
+        want = float(np.quantile(xs, q))
+        # log-bucket contract: ±12.5% relative error (1/8 bucket width)
+        assert abs(got - want) <= 0.125 * want + 1, (q, got, want)
+
+
+def test_histogram_small_values_exact():
+    h = Histogram("small")
+    for v in [0, 1, 2, 3, 3, 3, 10, 15]:
+        h.observe(v)
+    assert h.quantile(0.0) == pytest.approx(0.5, abs=0.5)
+    assert 3 <= h.quantile(0.5) <= 4          # exact bucket, interpolated
+    h.reset()
+    assert h.count == 0 and h.quantile(0.5) == 0.0
+
+
+def test_registry_get_or_create_and_type_clash():
+    m = MetricsRegistry()
+    c = m.counter("a")
+    assert m.counter("a") is c
+    m.gauge("g").set(3)
+    m.histogram("h").observe(7)
+    c.add(2)
+    snap = m.snapshot()
+    assert snap["a"] == 2 and snap["g"] == 3
+    assert snap["h"]["count"] == 1 and snap["h"]["p50"] == pytest.approx(
+        7.5, abs=1)
+    with pytest.raises(TypeError):
+        m.gauge("a")
+    assert isinstance(m.gauge("g2"), Gauge)
+
+
+# ---------------------------------------------------------------------------
+# chrome export
+# ---------------------------------------------------------------------------
+
+
+def _sample_trace():
+    tr = Tracer()
+    tr.enable()
+    tr.emit("req", "submit", rid=0)
+    tr.emit("req", "admit", rid=0, cached=0)
+    tr.emit("lock", "publish", lock="kv", batch=4)
+    tr.emit_span("engine", "decode_step", t0_ns=10_000, dur_ns=2_000,
+                 batch=4)
+    tr.emit("req", "first_token", rid=0)
+    tr.emit("req", "done", rid=0, tokens=3)
+    return tr.snapshot()
+
+
+def test_chrome_schema_and_roundtrip():
+    evs = _sample_trace()
+    obj = chrome.to_chrome(evs)
+    assert chrome.validate(obj) == []
+    # JSON round-trip preserves the trace and still validates
+    obj2 = json.loads(chrome.dumps(evs))
+    assert chrome.validate(obj2) == []
+    assert obj2 == json.loads(json.dumps(obj))
+    phases = [e["ph"] for e in obj["traceEvents"]]
+    assert phases.count("X") == 1            # the decode span
+    assert phases.count("b") == 1 and phases.count("e") == 1   # req 0
+    x = next(e for e in obj["traceEvents"] if e["ph"] == "X")
+    assert x["dur"] == pytest.approx(2.0)    # ns -> us
+    b = next(e for e in obj["traceEvents"] if e["ph"] == "b")
+    assert b["id"] == 0 and "ttft_us" in b["args"]
+
+
+def test_chrome_validate_catches_malformed():
+    assert chrome.validate({"nope": 1})
+    bad = {"traceEvents": [{"name": "x", "ph": "X", "ts": 1.0,
+                            "pid": 1, "tid": 1}]}          # missing dur
+    assert any("dur" in e for e in chrome.validate(bad))
+    unbalanced = {"traceEvents": [
+        {"name": "r", "cat": "req", "ph": "b", "ts": 1.0, "pid": 1,
+         "tid": 0, "id": 9}]}
+    assert any("unmatched" in e for e in chrome.validate(unbalanced))
