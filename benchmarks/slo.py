@@ -1,0 +1,303 @@
+"""Closed-loop SLO benchmark: the PR-9 acceptance record.
+
+The same seeded burst trace (``repro.serving.loadgen``) is replayed
+twice against identically-sized engines:
+
+* **static** — fixed admission limits (``max_slots``, watermark), the
+  pre-PR-9 configuration.  Bursts pile every arrival into the active
+  batch; post-admission first-token latency inflates with the batch.
+* **closed_loop** — a :class:`~repro.serving.scheduler.\
+LatencyFeedbackController` watches windowed step-latency / TTFT p99 and
+  modulates the admission watermark + slot cap (multiplicative decrease
+  past the knee, additive recovery, hysteresis).
+
+The knee target is *calibrated on this machine*: a single-request run
+measures the uncontended decode p50 and the controller's step target is
+set a fixed factor above it, so the gate is meaningful on any CPU.
+
+Gates (all double as CI smoke checks — nonzero exit on any loss):
+
+* zero dropped requests and exact token counts in BOTH runs; sampled
+  requests match the dense (non-paged) reference token-for-token;
+* the controller actually acted (>= 1 ``sched.ctrl_*`` decision event)
+  and the closed loop held p99 TTFT no worse than static (band) or beat
+  it on goodput;
+* the closed run's Chrome export validates, including the new Perfetto
+  counter tracks (``ph: "C"``) for watermark / active slots / p99;
+* the SLO report folds (per-tenant + per-class attainment) and the
+  prefix-cache collision rate is recorded alongside ``pages_saved``.
+
+    PYTHONPATH=src python -m benchmarks.slo            # full, writes JSON
+    PYTHONPATH=src python -m benchmarks.slo --smoke    # CI gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks.smoke import FAILURES, check
+from repro import configs
+from repro.dist.sharding import MeshRules
+from repro.models import model as M
+from repro.obs import TRACER
+from repro.obs.chrome import to_chrome, validate
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.loadgen import (LoadgenConfig, fold_report,
+                                   generate_trace, replay)
+from repro.serving.scheduler import ControllerConfig, SchedulerConfig
+from repro.serving.steps import make_decode_step
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: shorter trace")
+    ap.add_argument("--out", default=None)
+    return ap.parse_args()
+
+
+ARGS = _parse()
+CFG = configs.get_smoke("llama3.2-1b")
+PARAMS = M.init_params(jax.random.PRNGKey(0), CFG)
+RULES = MeshRules()
+
+MAX_SLOTS = 8
+KNEE_FACTOR = 4.0       # controller TTFT target = uncontended TTFT x this
+
+
+def mesh1():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+def _engine(controller=None, n_pages=128):
+    sc = SchedulerConfig(max_slots=MAX_SLOTS, page_size=8, max_seq=64,
+                         prefill_chunk=8, prefill_rows=2, token_budget=16,
+                         controller=controller)
+    ecfg = EngineConfig(idle_poll_s=0.01)
+    return ServingEngine(CFG, PARAMS, mesh=mesh1(), rules=RULES,
+                         n_pages=n_pages, scheduler=sc, engine_cfg=ecfg)
+
+
+def _dense_reference(prompt: np.ndarray, max_new: int):
+    decode = jax.jit(make_decode_step(CFG, mesh1(), RULES))
+    caches = M.init_caches(CFG, 1, 64, dtype=jnp.bfloat16)
+    s = len(prompt)
+    out = []
+    cur = jnp.asarray(prompt[:1][None])
+    for step in range(s - 1 + max_new):
+        clen = jnp.full((1,), step + 1, jnp.int32)
+        nxt, _, caches = decode(PARAMS, caches, cur, clen)
+        if step + 1 < s:
+            cur = jnp.asarray(prompt[step + 1:step + 2][None])
+        else:
+            cur = nxt
+            out.append(int(np.asarray(nxt)[0, 0]))
+    return out
+
+
+def calibrate_targets_ms():
+    """Uncontended decode p50 and TTFT on this machine (requests run
+    back to back, alone on the engine) — the knee references the
+    controller's targets are set against.  The first requests absorb the
+    JIT compiles (prefill and decode shapes compile separately); the
+    histogram's low quantile then isolates the clean uncontended TTFT
+    from the compile-inflated early samples."""
+    eng = _engine()
+    eng.start()
+    oks = []
+    for rid in range(4):
+        r = Request(rid=rid, prompt=np.arange(1, 9, dtype=np.int32) + rid,
+                    max_new=8)
+        eng.submit(r)
+        oks.append(r.done.wait(timeout=600)
+                   and r.out is not None and len(r.out) == 8)
+    h_step = eng.metrics.histogram("engine.step_ns")
+    h_ttft = eng.metrics.histogram("engine.ttft_ns")
+    step_p50_ns = h_step.quantile(0.50) if h_step.count else 0.0
+    ttft_lo_ns = h_ttft.quantile(0.01) if h_ttft.count else 0.0
+    eng.stop()
+    check(all(oks), "calibration requests complete")
+    check(step_p50_ns > 0 and ttft_lo_ns > 0,
+          "calibration measured decode p50 and uncontended TTFT")
+    return step_p50_ns / 1e6, ttft_lo_ns / 1e6
+
+
+def _trace_cfg(smoke: bool) -> LoadgenConfig:
+    return LoadgenConfig(
+        duration_s=2.5 if smoke else 8.0,
+        base_rps=8.0 if smoke else 6.0,
+        burst_factor=5.0,
+        burst_period_s=1.25 if smoke else 2.5,
+        burst_duty=0.3,
+        seed=7,
+    )
+
+
+def _run(trace, controller, *, label: str):
+    """Replay the trace against a fresh engine; fold the SLO report."""
+    TRACER.clear()
+    TRACER.enable()
+    try:
+        eng = _engine(controller=controller)
+        eng.start()
+        t0 = time.monotonic()
+        reqs = replay(eng, trace, timeout_s=600.0)
+        wall_s = time.monotonic() - t0
+        eng.stop()
+        events = TRACER.snapshot()
+    finally:
+        TRACER.disable()
+    dropped = sum(1 for r in reqs
+                  if r.out is None or len(r.out) != r.max_new)
+    tokens = sum(len(r.out) for r in reqs if r.out is not None)
+    report = fold_report(trace, events=events,
+                         pool_stats=eng.kv_pool.stats(),
+                         pages_saved=eng.stats.pages_saved)
+    check(dropped == 0,
+          f"{label}: zero dropped/truncated requests (got {dropped})")
+    return {"reqs": reqs, "events": events, "report": report,
+            "wall_s": wall_s, "dropped": dropped, "tokens": tokens,
+            "engine": eng}
+
+
+def _summary(run, label: str) -> dict:
+    o = run["report"].overall
+    return {
+        "requests": o["requests"],
+        "dropped": run["dropped"],
+        "preemptions": o["preemptions"],
+        "p50_ttft_ms": o["ttft_p50_ms"],
+        "p99_ttft_ms": o["ttft_p99_ms"],
+        "p99_tpot_ms": o["tpot_p99_ms"],
+        "attainment": o["attainment"],
+        "goodput_tok_per_s": round(run["tokens"]
+                                   / max(run["wall_s"], 1e-9), 2),
+        "label": label,
+    }
+
+
+def bench_closed_loop(smoke: bool) -> dict:
+    step_p50_ms, ttft_ms = calibrate_targets_ms()
+    # On this single-CPU toy model batched decode costs about the same
+    # as batch-of-one, so the saturation signal the burst produces is
+    # queue-driven TTFT, not step latency: the TTFT sensor (target a
+    # fixed factor over the uncontended first token) drives the loop
+    # and the step sensor rides along as the safety net.
+    cc = ControllerConfig(
+        step_p99_target_ms=round(step_p50_ms * 3.0, 3),
+        ttft_p99_target_ms=round(max(ttft_ms * KNEE_FACTOR, 20.0), 3),
+        period_s=0.05, window_s=1.0, slices=8,
+        min_samples=2, min_slots=1, decrease=0.5,
+        recover_after=2, cooldown=2, probe_after=6,
+        watermark_step=0.05, watermark_max=0.5)
+
+    cfg = _trace_cfg(smoke)
+    trace = generate_trace(cfg)
+    check(len(trace.requests) >= 8,
+          f"trace has enough load ({len(trace.requests)} requests)")
+
+    static = _run(trace, None, label="static")
+    closed = _run(trace, cc, label="closed_loop")
+
+    # --- token exactness against the dense (non-paged) reference -------
+    n_ref = 1 if smoke else 2
+    sample = sorted(trace.requests, key=lambda t: len(t.prompt))[:n_ref]
+    for tr in sample:
+        want = _dense_reference(tr.prompt, tr.max_new)
+        for run, label in ((static, "static"), (closed, "closed_loop")):
+            got = list(run["reqs"][trace.requests.index(tr)].out)
+            check(got == want,
+                  f"{label}: rid {tr.rid} tokens == dense reference")
+
+    # --- controller activity + chrome export ---------------------------
+    ev = closed["events"]
+    decisions = [e for e in ev if e.cat == "sched"
+                 and e.name in ("ctrl_shrink", "ctrl_grow")]
+    states = [e for e in ev if e.cat == "sched" and e.name == "ctrl_state"]
+    trace_json = to_chrome(ev)
+    errors = validate(trace_json)
+    counters = [r for r in trace_json["traceEvents"] if r.get("ph") == "C"]
+    check(len(decisions) >= 1,
+          f"controller acted on the burst "
+          f"(got {len(decisions)} decision events)")
+    check(len(counters) >= 1,
+          f"Perfetto counter track present ({len(counters)} C events)")
+    check(not errors,
+          f"closed-loop chrome trace validates (errors: {errors[:3]})")
+
+    # --- the closed-loop claim -----------------------------------------
+    sp99 = static["report"].overall["ttft_p99_ms"]
+    cp99 = closed["report"].overall["ttft_p99_ms"]
+    sgp = static["tokens"] / max(static["wall_s"], 1e-9)
+    cgp = closed["tokens"] / max(closed["wall_s"], 1e-9)
+    win = (cp99 <= sp99 * 1.10) or (cp99 <= sp99 * 1.5 and cgp >= sgp)
+    check(win,
+          f"closed loop holds p99 TTFT (static {sp99:.1f} ms vs "
+          f"closed {cp99:.1f} ms) or wins on goodput "
+          f"({sgp:.1f} vs {cgp:.1f} tok/s)")
+
+    pool = closed["report"].pool
+    sched_stats = closed["engine"].scheduler.stats() \
+        if closed["engine"].scheduler else {}
+    return {
+        "trace": {"requests": len(trace.requests),
+                  "duration_s": cfg.duration_s,
+                  "base_rps": cfg.base_rps,
+                  "burst_factor": cfg.burst_factor,
+                  "seed": cfg.seed},
+        "calibrated_step_target_ms": cc.step_p99_target_ms,
+        "calibrated_ttft_target_ms": cc.ttft_p99_target_ms,
+        "static": _summary(static, "static"),
+        "closed_loop": _summary(closed, "closed_loop"),
+        "controller": {"decision_events": len(decisions),
+                       "state_samples": len(states),
+                       "final_slot_cap": sched_stats.get("slot_cap"),
+                       "final_free_frac": sched_stats.get(
+                           "admit_free_frac")},
+        "per_class": closed["report"].to_dict()["per_class"],
+        "pool": pool,
+        "chrome": {"events": len(trace_json["traceEvents"]),
+                   "counter_events": len(counters),
+                   "validate_errors": errors[:5]},
+    }
+
+
+def main() -> int:
+    rec = {
+        "bench": "slo",
+        "mode": "smoke" if ARGS.smoke else "full",
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "model": CFG.name,
+        "closed_loop_vs_static": bench_closed_loop(ARGS.smoke),
+        "failures": FAILURES,
+    }
+    out = ARGS.out
+    if out is None and not ARGS.smoke:
+        out = str(Path(__file__).resolve().parents[1] / "BENCH_slo.json")
+    if out:
+        Path(out).write_text(json.dumps(rec, indent=1))
+        print(f"wrote {out}", flush=True)
+    body = rec["closed_loop_vs_static"]
+    print(json.dumps({k: body[k] for k in
+                      ("static", "closed_loop", "controller", "pool")},
+                     indent=1))
+    if FAILURES:
+        print(f"FAILED: {FAILURES}", file=sys.stderr)
+        return 1
+    print("slo bench OK", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,6 +18,10 @@ scratch file and this gate diffs the two:
   baseline in absolute terms.
 * the ``failures`` list must be empty in the fresh record.
 * everything else (counts, config echoes) is informational only.
+* fresh leaves with no baseline counterpart are reported as **new,
+  unguarded** (informational, never failing): a bench grew a metric the
+  committed baseline does not cover yet — re-record the baseline to put
+  it under the gate.
 
 The default band is deliberately wide (``--tol 0.5``): CI runs on shared
 CPU where 2x timing noise is routine; the gate exists to catch order-of-
@@ -99,6 +103,14 @@ def compare(baseline: dict, fresh: dict, tol: float) -> List[str]:
     return bad
 
 
+def unguarded(baseline: dict, fresh: dict) -> List[str]:
+    """Fresh leaves absent from the baseline: metrics the committed
+    record does not gate yet (informational, never a failure)."""
+    known = {path for path, _, _ in _leaves(baseline)}
+    return [f"{path} = {fv!r}" for path, key, fv in _leaves(fresh)
+            if path not in known and key not in _SKIP_KEYS]
+
+
 def gate_file(fresh_path: Path, baseline_dir: Path, tol: float) -> int:
     fresh = json.loads(fresh_path.read_text())
     name = fresh.get("bench")
@@ -112,6 +124,13 @@ def gate_file(fresh_path: Path, baseline_dir: Path, tol: float) -> int:
               f"treating as new bench (pass)")
         return 0
     baseline = json.loads(bpath.read_text())
+    new = unguarded(baseline, fresh)
+    if new:
+        print(f"{fresh_path.name}: {len(new)} new, unguarded metric(s) "
+              f"vs {bpath.name} (informational; re-record the baseline "
+              f"to gate them):")
+        for n in new[:20]:
+            print(f"  {n}")
     bad = compare(baseline, fresh, tol)
     if bad:
         print(f"REGRESSION vs {bpath.name}:", file=sys.stderr)

@@ -9,8 +9,11 @@
 #            to stderr (repro.ft.faults traces every injection)
 #   --smoke  run ONLY the observability gates: benchmarks/obs.py (< 2%
 #            traced step-latency overhead, noise-level disabled sites,
-#            chrome export validates) + the bench-gate comparison against
-#            the committed BENCH_obs.json baseline
+#            chrome export validates) + benchmarks/slo.py (closed-loop
+#            admission holds p99 TTFT under a seeded burst, zero dropped,
+#            controller decisions on the timeline) + the bench-gate
+#            comparison against the committed BENCH_obs.json /
+#            BENCH_slo.json baselines
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -57,11 +60,16 @@ run_smoke_obs() {
   # band is wide (the smoke workload is smaller than the committed full
   # record): it catches order-of-magnitude drift and lost boolean
   # guarantees; the tight <2% bound is asserted inside the bench itself.
-  local fresh
+  local fresh fresh_slo
   fresh="$(mktemp -t BENCH_obs_fresh.XXXXXX)"
+  fresh_slo="$(mktemp -t BENCH_slo_fresh.XXXXXX)"
   python -m benchmarks.obs --smoke --out "$fresh"
-  python scripts/bench_gate.py --fresh "$fresh" --tol 4.0
-  rm -f "$fresh"
+  # closed-loop SLO gate: seeded burst trace, latency-feedback admission
+  # vs static limits (zero dropped, tokens == dense reference, controller
+  # decision events + Perfetto counter tracks in a validating export)
+  python -m benchmarks.slo --smoke --out "$fresh_slo"
+  python scripts/bench_gate.py --fresh "$fresh" "$fresh_slo" --tol 4.0
+  rm -f "$fresh" "$fresh_slo"
 }
 
 if [[ "${1:-}" == "--lint" ]]; then
@@ -126,6 +134,7 @@ python -m benchmarks.prefill --smoke
 # -> stuck-lane scrub -> retried swap lands, still 0 dropped)
 python -m benchmarks.hotswap --smoke
 
-# observability overhead gates + perf-regression gate vs the committed
-# BENCH_obs.json baseline (see run_smoke_obs above / ci.sh --smoke)
+# observability overhead gates + closed-loop SLO gate + perf-regression
+# gate vs the committed BENCH_obs.json / BENCH_slo.json baselines (see
+# run_smoke_obs above / ci.sh --smoke)
 run_smoke_obs

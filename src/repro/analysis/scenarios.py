@@ -679,6 +679,104 @@ def build_kvpool_model(mem: Mem, mutation: Optional[str] = None) -> Instance:
 
 
 # ---------------------------------------------------------------------------
+# S6 — latency-feedback admission controller (real policy code, PR 9)
+# ---------------------------------------------------------------------------
+
+
+def build_controller_model(mem: Mem,
+                           mutation: Optional[str] = None) -> Instance:
+    """A latency sensor feeding the REAL
+    :class:`repro.serving.scheduler.LatencyFeedbackController` (pure
+    host policy — the checker drives its transition function directly).
+
+    The sensor thread publishes two over-target latencies, then a
+    healthy one, then signals done; the controller thread takes three
+    updates against whatever it happens to read (any interleaving), then
+    waits for the signal and takes six guaranteed-healthy updates.
+
+    Invariants (the ISSUE-9 wedge-freedom contract):
+
+    * ``controller-cap-bounds`` — after every committed op the cap stays
+      in ``[min_slots, max_slots]`` and the watermark in
+      ``[0, watermark_max]`` with ``watermark_max < 1``: no reachable
+      state shuts admission completely.
+    * ``controller-wedged`` (at exit) — if any shrink happened, the six
+      trailing healthy updates must have produced at least one recovery
+      grow (cooldown=1 + max(recover_after=1, probe_after=2) < 6 from
+      every reachable post-shrink state).  The
+      ``ctrl-recovery-dropped`` mutation — the additive-recovery branch
+      never fires — wedges the cap at its post-shrink floor and trips
+      exactly this.
+    """
+    from ..serving.scheduler import (ControllerConfig,
+                                     LatencyFeedbackController)
+
+    class _DroppedRecoveryController(LatencyFeedbackController):
+        """MUTATION ctrl-recovery-dropped: the healthy streak never
+        accumulates, so additive recovery (and the ceiling probe) never
+        fire — one burst wedges admission at the shrunken cap forever."""
+
+        def step(self, *a):
+            self._healthy = -(10 ** 9)
+            return super().step(*a)
+
+    ccfg = ControllerConfig(step_p99_target_ms=1.0, min_samples=1,
+                            min_slots=1, decrease=0.5, recover_after=1,
+                            cooldown=1, probe_after=2,
+                            watermark_step=0.1, watermark_max=0.5)
+    cls = (_DroppedRecoveryController
+           if mutation == "ctrl-recovery-dropped"
+           else LatencyFeedbackController)
+    ctrl = cls(ccfg, max_slots=4, free_frac=0.0)
+    lat = mem.alloc("lat_us")       # sensor -> controller (0 = no sample)
+    done = mem.alloc("sensor_done")
+    cap_pub = mem.alloc("cap_pub")  # controller's published decisions —
+    frac_pub = mem.alloc("frac_x1000")  # the observable admission limits
+
+    def _update():
+        v = lat.load()              # schedule point: any interleaving of
+        if v:                       # sensor writes is explored
+            ctrl.step(v * 1000.0, 1, 0.0, 0)
+        cap_pub.store(ctrl.slot_cap)
+        frac_pub.store(int(ctrl.free_frac * 1000))
+
+    def t_sensor():                 # tid 0
+        lat.store(2000)             # 2ms — over the 1ms knee target
+        lat.store(2000)
+        lat.store(100)              # burst drained: healthy again
+        done.store(1)
+
+    def t_controller():             # tid 1
+        for _ in range(3):          # races the burst: may see 0/2000/100
+            _update()
+        mem.wait_while(done, lambda v: v == 0)
+        for _ in range(6):          # guaranteed-healthy tail: recovery
+            _update()               # must happen if anything shrank
+
+    def check(ev):
+        if not (ccfg.min_slots <= ctrl.slot_cap <= ctrl.max_slots):
+            raise InvariantViolation(
+                "controller-cap-bounds",
+                f"slot cap {ctrl.slot_cap} outside "
+                f"[{ccfg.min_slots}, {ctrl.max_slots}]")
+        if not (0.0 <= ctrl.free_frac <= ccfg.watermark_max):
+            raise InvariantViolation(
+                "controller-cap-bounds",
+                f"watermark {ctrl.free_frac} outside "
+                f"[0, {ccfg.watermark_max}]")
+
+    def at_end():
+        if ctrl.shrinks > 0 and ctrl.grows == 0:
+            raise InvariantViolation(
+                "controller-wedged",
+                f"cap shrank to {ctrl.slot_cap} and never recovered "
+                f"under sustained healthy latency (shrinks="
+                f"{ctrl.shrinks}, grows=0): admission wedged")
+
+    return Instance([t_sensor, t_controller], check, at_end)
+
+
+# ---------------------------------------------------------------------------
 # Registry of scenarios and mutations
 # ---------------------------------------------------------------------------
 
@@ -693,6 +791,9 @@ SCENARIOS: Dict[str, Scenario] = {
                               max_schedules=10000),
     "kvpool-model": Scenario("kvpool-model", 3, build_kvpool_model,
                              max_schedules=6000),
+    "controller-model": Scenario("controller-model", 2,
+                                 build_controller_model,
+                                 max_schedules=4000),
 }
 
 #: mutation flag -> the scenario whose invariants catch it
@@ -701,4 +802,5 @@ MUTATIONS: Dict[str, str] = {
     "drain-off-by-one": "registry-model",
     "park-wakeup-lost": "parking-model",
     "cow-write-through": "kvpool-model",
+    "ctrl-recovery-dropped": "controller-model",
 }

@@ -10,6 +10,11 @@ Three pieces, one contract:
 * :mod:`.metrics` — registry of counters / gauges / log-bucket
   histograms that replaces the scattered stats dicts (engine, pool,
   registry) with one namespace per serving plane.
+* :mod:`.slo` (PR 9) — the SLO plane on top: windowed percentile
+  monitors (p50/p99 over the last W seconds, O(1) per sample), per-
+  class :class:`~.slo.SLOTarget` contracts, and the
+  :class:`~.slo.SLOReport` attainment fold the load harness and the
+  latency-feedback admission controller consume.
 * the **overhead contract** — tracing disabled costs ONE branch per
   emit site; device-side counters are folded as dispatch-only adds and
   harvested only at control-event boundaries.  ``benchmarks/obs.py``
@@ -22,10 +27,12 @@ with its lock registry and KV pool) so tests and co-resident engines
 never contaminate each other's counters.
 """
 
+from .chrome import COUNTER_EVENTS  # noqa: F401
 from .chrome import dumps as chrome_dumps  # noqa: F401
 from .chrome import to_chrome, validate as validate_chrome  # noqa: F401
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,  # noqa: F401
                       default_metrics)
+from .slo import SLOReport, SLOTarget, WindowedHistogram  # noqa: F401
 from .trace import (CATEGORIES, TraceEvent, Tracer,  # noqa: F401
                     derive_requests, format_timeline)
 
@@ -33,7 +40,8 @@ __all__ = ["TRACER", "tracer", "enable", "disable", "clear", "snapshot",
            "Tracer", "TraceEvent", "derive_requests", "format_timeline",
            "CATEGORIES", "Counter", "Gauge", "Histogram",
            "MetricsRegistry", "default_metrics", "to_chrome",
-           "chrome_dumps", "validate_chrome"]
+           "chrome_dumps", "validate_chrome", "COUNTER_EVENTS",
+           "WindowedHistogram", "SLOTarget", "SLOReport"]
 
 #: The process-wide trace.  Subsystems cache this at import and gate
 #: every emit on ``TRACER.enabled`` — one branch per site when off.

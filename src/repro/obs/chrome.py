@@ -13,6 +13,12 @@ event has ``name`` / ``ph`` / ``ts`` (microseconds) / ``pid`` /
 * ``b`` / ``e`` (async) — per-request lifecycle spans DERIVED from the
   ``req`` stream (admit -> done), on their own ``id`` so requests that
   span threads and interleave still render as one track each.
+* ``C`` (counter) — sampled numeric tracks.  Events listed in
+  ``COUNTER_EVENTS`` (the latency-feedback controller's periodic
+  ``sched.ctrl_state``: admission watermark, active slots / slot cap,
+  windowed p99 step latency) export each numeric arg as one counter
+  series, so every shrink/grow decision lines up visually with the
+  latency curve it reacted to.
 
 :func:`validate` re-checks an export against the schema (required keys
 per phase, numeric timestamps, balanced async begin/end per id) — the
@@ -27,9 +33,13 @@ from typing import Any, Dict, List
 
 from .trace import TraceEvent, derive_requests
 
-__all__ = ["to_chrome", "validate", "dumps"]
+__all__ = ["to_chrome", "validate", "dumps", "COUNTER_EVENTS"]
 
 _REQUIRED = {"name", "ph", "ts", "pid", "tid"}
+
+#: (cat, name) instants exported as Perfetto counter tracks (``C``
+#: phase): each numeric arg becomes one series under the event name.
+COUNTER_EVENTS = {("sched", "ctrl_state")}
 
 
 def to_chrome(events: List[TraceEvent], pid: int = 1) -> Dict[str, Any]:
@@ -49,6 +59,14 @@ def to_chrome(events: List[TraceEvent], pid: int = 1) -> Dict[str, Any]:
         if e.dur_ns > 0:
             rec["ph"] = "X"
             rec["dur"] = e.dur_ns / 1e3
+        elif (e.cat, e.name) in COUNTER_EVENTS and e.args:
+            rec["ph"] = "C"                # counter sample: numeric series
+            rec["tid"] = 0                 # one shared track per name
+            rec["args"] = {k: v for k, v in rec["args"].items()
+                           if isinstance(v, (int, float))
+                           and not isinstance(v, bool)}
+            if not rec["args"]:
+                continue                   # nothing numeric to plot
         else:
             rec["ph"] = "i"
             rec["s"] = "t"                 # instant scoped to its thread
@@ -105,6 +123,15 @@ def validate(obj: Any) -> List[str]:
         if ph == "X":
             if not isinstance(e.get("dur"), (int, float)) or e["dur"] < 0:
                 errs.append(f"event {i}: X phase needs dur >= 0")
+        elif ph == "C":
+            args = e.get("args")
+            if not isinstance(args, dict) or not args:
+                errs.append(f"event {i}: C phase needs a non-empty args "
+                            f"dict of series values")
+            elif not all(isinstance(v, (int, float))
+                         and not isinstance(v, bool)
+                         for v in args.values()):
+                errs.append(f"event {i}: C phase args must be numeric")
         elif ph in ("b", "e"):
             if "id" not in e:
                 errs.append(f"event {i}: async {ph} needs an id")

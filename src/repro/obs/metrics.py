@@ -199,9 +199,31 @@ class MetricsRegistry:
     def histogram(self, name: str) -> Histogram:
         return self._get(name, Histogram)
 
+    def windowed(self, name: str, window_s: float = 2.0, slices: int = 8):
+        """A :class:`repro.obs.slo.WindowedHistogram` (p50/p99 over the
+        last ``window_s`` seconds — the latency-feedback controller's
+        sensor shape).  Window parameters apply on first registration;
+        later callers get the existing monitor regardless of arguments
+        (same idempotence as the other accessors)."""
+        from .slo import WindowedHistogram   # circular: slo uses buckets
+        m = self._metrics.get(name)
+        if m is None:
+            with self._mu:
+                m = self._metrics.get(name)
+                if m is None:
+                    m = WindowedHistogram(name, window_s=window_s,
+                                          slices=slices)
+                    self._metrics[name] = m
+        if not isinstance(m, WindowedHistogram):
+            raise TypeError(
+                f"metric {name!r} already registered as "
+                f"{type(m).__name__}, requested WindowedHistogram")
+        return m
+
     def snapshot(self) -> Dict[str, object]:
         """Flat read of every metric: counters/gauges as scalars,
-        histograms as ``{count, mean, p50, p90, p99}`` dicts.
+        histograms as ``{count, mean, p50, p90, p99}`` dicts, windowed
+        monitors as their in-window ``{count, mean, p50, p99}``.
         Aggregating — off the hot path (never inside a lease window)."""
         with self._mu:
             items = sorted(self._metrics.items())
@@ -213,6 +235,8 @@ class MetricsRegistry:
                              "p50": round(m.quantile(0.50), 1),
                              "p90": round(m.quantile(0.90), 1),
                              "p99": round(m.quantile(0.99), 1)}
+            elif hasattr(m, "window_snapshot"):
+                out[name] = m.window_snapshot()
             else:
                 out[name] = m.value
         return out

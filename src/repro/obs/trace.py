@@ -48,7 +48,10 @@ category     events
              ``swap_degrade``, ``swap_abandon``, ``worker_crash``,
              ``compact``
 ``sched``    pure-policy decisions: ``admit``, ``evict``, ``finish``,
-             ``defer``
+             ``defer``, and the latency-feedback controller's
+             ``ctrl_shrink`` / ``ctrl_grow`` (admission watermark and
+             active-slot cap changes) + ``ctrl_state`` (periodic
+             sample; exported as a Perfetto counter track)
 ``fault``    injected faults (``repro.ft.faults``): ``inject`` with the
              fault name — every chaos failure carries its timeline
 ===========  ==============================================================
@@ -234,15 +237,23 @@ def derive_requests(events: List[TraceEvent]) -> Dict[int, Dict[str, Any]]:
       first token; None until both ends exist);
     * ``tpot_ns``  — (done - first token) / (tokens - 1), the mean
       time per output token across the decode phase;
-    * ``evictions`` / ``prefill_chunks`` / ``cached_tokens`` — how the
-      request actually moved through the FSM.
+    * ``evictions`` / ``preemptions`` / ``prefill_chunks`` /
+      ``cached_tokens`` — how the request actually moved through the
+      FSM (``preemptions`` == ``evictions``; the SLO report uses the
+      scheduling name).
+
+    Preemption safety: a LIFO-preempted request re-prefills after
+    requeue and emits ``admit`` / ``first_token`` again — both are
+    derived from the FIRST occurrence only, so TTFT always measures
+    the original admission to the original first token, never the
+    (shorter) re-prefill of an already-generated prefix.
     """
     reqs: Dict[int, Dict[str, Any]] = {}
 
     def slot(rid) -> Dict[str, Any]:
         return reqs.setdefault(int(rid), {
             "submit_ts": None, "admit_ts": None, "first_token_ts": None,
-            "done_ts": None, "tokens": 0, "evictions": 0,
+            "done_ts": None, "tokens": 0, "evictions": 0, "preemptions": 0,
             "prefill_chunks": 0, "cached_tokens": 0,
             "ttft_ns": None, "tpot_ns": None})
 
@@ -266,6 +277,7 @@ def derive_requests(events: List[TraceEvent]) -> Dict[int, Dict[str, Any]]:
             r["tokens"] = int(e.args.get("tokens", r["tokens"]))
         elif e.name == "evict":
             r["evictions"] += 1
+            r["preemptions"] += 1
     for r in reqs.values():
         if r["admit_ts"] is not None and r["first_token_ts"] is not None:
             r["ttft_ns"] = r["first_token_ts"] - r["admit_ts"]

@@ -70,7 +70,8 @@ from ..models.common import ModelConfig
 from ..obs import TRACER as _TR
 from ..obs.metrics import MetricsRegistry
 from .kv_pool import KVPool, page_keys
-from .scheduler import Phase, Scheduler, SchedulerConfig, SlotState
+from .scheduler import (LatencyFeedbackController, Phase, Scheduler,
+                        SchedulerConfig, SlotState)
 from .steps import (jit_step, make_decode_step, make_paged_prefill_step,
                     make_prefill_step)
 
@@ -117,6 +118,11 @@ class Request:
     out: Optional[np.ndarray] = None
     done: threading.Event = dataclasses.field(
         default_factory=threading.Event)
+    # SLO plane (PR 9): tenant/class label the request in SLOReport
+    # folds; priority feeds the scheduler's per-class admission order
+    tenant: str = ""
+    cls: str = ""
+    priority: int = 0
 
 
 _ENGINE_COUNTERS = (
@@ -524,6 +530,31 @@ class ServingEngine:
             # out of the latency histogram (compile-time outliers would
             # dominate p99 for the whole run)
             self._steps_seen = 0
+            # ---- latency-feedback admission (PR 9): windowed sensors +
+            # AIMD controller over the scheduler's runtime limits.  The
+            # engine OBSERVES into the windows (O(1), next to the
+            # existing histogram observes) and periodically lets the
+            # controller read them — always at tick top level, never
+            # inside a lease window
+            self._controller = None
+            self._w_step = self._w_ttft = None
+            self._h_ttft = self.metrics.histogram("engine.ttft_ns")
+            if sc.controller is not None:
+                cc = sc.controller
+                self._w_step = self.metrics.windowed(
+                    "slo.step_ns", cc.window_s, cc.slices)
+                self._w_ttft = self.metrics.windowed(
+                    "slo.ttft_ns", cc.window_s, cc.slices)
+                self._controller = LatencyFeedbackController(
+                    cc, max_slots=sc.max_slots,
+                    free_frac=sc.admit_free_frac,
+                    step_window=self._w_step, ttft_window=self._w_ttft)
+                self._g_slot_cap = self.metrics.gauge("sched.slot_cap")
+                self._g_free_frac = self.metrics.gauge(
+                    "sched.admit_free_frac")
+                self._g_slot_cap.set(sc.max_slots)
+                self._g_free_frac.set(sc.admit_free_frac)
+                self._ctrl_next_ns = 0
 
     # ------------------------------------------------------------- handlers
     def _handler(self, hid: int) -> None:
@@ -611,7 +642,8 @@ class ServingEngine:
     def _submit_slot(self, r: Request) -> None:
         self.scheduler.submit(SlotState(
             rid=r.rid, prefix=np.asarray(r.prompt, np.int32),
-            max_new=r.max_new, request=r))
+            max_new=r.max_new, request=r, tenant=r.tenant, cls=r.cls,
+            priority=r.priority))
 
     def _drain_inq(self) -> None:
         while True:
@@ -773,6 +805,8 @@ class ServingEngine:
         st.shared_refs = refs
         st.cached_pos = cov
         st.prefill_pos = st.pos = cov     # chunked prefill resumes here
+        st.admit_ns = time.monotonic_ns()  # TTFT sensor anchor (latest
+        #                                    admission; trace keeps first)
         self._rids = self._rids.at[st.row].set(st.rid)
         self._bind_pages(st, refs + pages, charged=len(pages) + revived)
         self.stats.inc("pages_charged", len(pages))
@@ -875,6 +909,11 @@ class ServingEngine:
                 self._cur = self._cur.at[row, 0].set(tok)
                 self._clen = self._clen.at[row].set(st.pos + 1)
                 self._active = self._active.at[row].set(1)
+                if st.admit_ns:
+                    ttft = time.monotonic_ns() - st.admit_ns
+                    self._h_ttft.observe(ttft)
+                    if self._w_ttft is not None:
+                        self._w_ttft.observe(ttft)
                 if _TR.enabled:
                     _TR.emit("req", "first_token", rid=st.rid)
                 if self.scheduler.on_token(st, tok):
@@ -918,6 +957,8 @@ class ServingEngine:
         self._steps_seen += 1
         if self._steps_seen > self.ecfg.obs_warmup_steps:
             self._h_step.observe(dt)
+            if self._w_step is not None:
+                self._w_step.observe(dt)
         if _TR.enabled:
             _TR.emit_span("engine", "decode_step", t0, dur_ns=dt,
                           batch=len(slots))
@@ -928,6 +969,37 @@ class ServingEngine:
         self.stats.inc("decode_steps")
         self.stats.inc("read_acquires")
         self.stats.inc("tokens_out", len(slots))
+
+    def _ctrl_tick(self) -> None:
+        """Latency-feedback admission update (paced to the controller's
+        period).  Reads the windowed sensors — an aggregating read, legal
+        here at tick top level, never inside a lease window — and applies
+        any decision through ``scheduler.set_limits`` (the engine never
+        assigns scheduler attributes; the lint enforces it)."""
+        now = time.monotonic_ns()
+        if now < self._ctrl_next_ns:
+            return
+        ctrl = self._controller
+        self._ctrl_next_ns = now + int(ctrl.ccfg.period_s * 1e9)
+        decision = ctrl.update(now)
+        if decision is not None:
+            self.scheduler.set_limits(ctrl.slot_cap, ctrl.free_frac)
+            self._g_slot_cap.set(ctrl.slot_cap)
+            self._g_free_frac.set(ctrl.free_frac)
+            if _TR.enabled:
+                _TR.emit("sched", f"ctrl_{decision}", cap=ctrl.slot_cap,
+                         watermark_pct=round(ctrl.free_frac * 100, 1),
+                         p99_step_us=round(ctrl.last_step_p99_ns / 1e3, 1),
+                         p99_ttft_us=round(ctrl.last_ttft_p99_ns / 1e3, 1))
+        if _TR.enabled:
+            # periodic counter-track sample (Perfetto `C` events): the
+            # watermark/slot curves line up with the latency they track
+            _TR.emit("sched", "ctrl_state",
+                     watermark_pct=round(ctrl.free_frac * 100, 1),
+                     slot_cap=ctrl.slot_cap,
+                     active_slots=len(self.scheduler.running),
+                     p99_step_us=round(ctrl.last_step_p99_ns / 1e3, 1),
+                     p99_ttft_us=round(ctrl.last_ttft_p99_ns / 1e3, 1))
 
     def _schedule_tick(self) -> bool:
         """One policy round: service compaction, admit, run the plan.
@@ -941,6 +1013,8 @@ class ServingEngine:
             self.stats.inc("compactions")
             if _TR.enabled:
                 _TR.emit("engine", "compact")
+        if self._controller is not None:
+            self._ctrl_tick()
         self._admit()
         plan = self.scheduler.plan()
         if plan.kind == "prefill":

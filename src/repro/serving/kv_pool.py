@@ -229,15 +229,22 @@ def _match_impl(owner, map_kh, map_kl, map_pg, map_ln, kh, kl, ln):
     contiguous prefix).  -> (per-key page or -1, run length, per-key
     currently-refcount-0 flags — acquiring such a hit consumes a free
     page, and the caller charges admission only for the keys it will
-    actually take)."""
+    actually take, and the lookup's COLLISION count: slots occupied by
+    a DIFFERENT key, i.e. direct-mapped conflicts where this lookup
+    could not even have hit — the baseline metric for the planned
+    set-associative index rework)."""
     slot = kl & (map_pg.shape[0] - 1)
     pg = map_pg[slot]
-    hit = (pg >= 0) & (map_kh[slot] == kh) & (map_kl[slot] == kl) \
-        & (map_ln[slot] == ln) & (ln > 0)
+    occupied = pg >= 0
+    key_eq = (map_kh[slot] == kh) & (map_kl[slot] == kl) \
+        & (map_ln[slot] == ln)
+    hit = occupied & key_eq & (ln > 0)
     run = jnp.cumprod(hit.astype(jnp.int32)) > 0
     pages = jnp.where(run, pg, -1)
     free_hit = run & (owner[jnp.clip(pg, 0)] == FREE)
-    return pages, jnp.sum(run.astype(jnp.int32)), free_hit
+    coll = occupied & ~key_eq & (ln > 0)
+    return (pages, jnp.sum(run.astype(jnp.int32)), free_hit,
+            jnp.sum(coll.astype(jnp.int32)))
 
 
 def _acquire_prefix_impl(owner, map_kh, map_kl, map_pg, map_ln,
@@ -247,8 +254,8 @@ def _acquire_prefix_impl(owner, map_kh, map_kl, map_pg, map_ln,
     the refcount of every hit the caller's ``take`` mask selects.  Returns
     the taken pages (-1 elsewhere) and how many came off the free list."""
     n_pages = owner.shape[0]
-    pages, _, _ = _match_impl(owner, map_kh, map_kl, map_pg, map_ln,
-                              kh, kl, ln)
+    pages, _, _, _ = _match_impl(owner, map_kh, map_kl, map_pg, map_ln,
+                                 kh, kl, ln)
     use = (pages >= 0) & take
     tgt = jnp.where(use, pages, n_pages)
     revived = jnp.sum((use & (owner[jnp.clip(pages, 0)] == FREE))
@@ -433,6 +440,12 @@ class KVPool:
         # lookups that matched >= 1 page
         self._c_prefix_hits = self.metrics.counter("pool.prefix_hits")
         self._c_prefix_inserts = self.metrics.counter("pool.prefix_inserts")
+        # per-key direct-mapped slot conflicts seen by lookups: the entry
+        # in the slot belongs to a DIFFERENT key, so a would-be hit is
+        # reported as a miss (ISSUE 9 satellite; baseline for the
+        # set-associative rework in the ROADMAP)
+        self._c_prefix_collisions = self.metrics.counter(
+            "pool.prefix_collision")
         # device-resident dedup-hit accumulator: folded in-graph on every
         # traced prefix acquisition, harvested only in stats()
         self._dev_hits = jnp.zeros((), jnp.int32)
@@ -462,6 +475,10 @@ class KVPool:
     @property
     def prefix_inserts(self) -> int:
         return self._c_prefix_inserts.value
+
+    @property
+    def prefix_collisions(self) -> int:
+        return self._c_prefix_collisions.value
 
     def _stripe(self, rid: int):
         return self.locks[rid % self.stripes]
@@ -583,7 +600,7 @@ class KVPool:
         consumes a free page when acquired).  SYNCHRONIZES; admission-
         control plane only.  Key vectors come from :func:`page_keys`."""
         with self._mu:
-            pages, n_run, free_hit = _programs().match(
+            pages, n_run, free_hit, n_coll = _programs().match(
                 self.owner, self._map_kh, self._map_kl, self._map_pg,
                 self._map_ln, jnp.asarray(kh), jnp.asarray(kl),
                 jnp.asarray(ln))
@@ -591,8 +608,12 @@ class KVPool:
         n = int(n_run)                # sync OUTSIDE the mutex: a writer's
         if n > 0:                     # dispatch must never queue behind a
             self._c_prefix_hits.add(1)  # reader's host round-trip
+        c = int(n_coll)               # direct-mapped conflicts: would-be
+        if c > 0:                     # hits turned into misses (PR-9
+            self._c_prefix_collisions.add(c)  # set-assoc baseline)
         if _TR.enabled:
-            _TR.emit("pool", "dedup_hit" if n > 0 else "dedup_miss", run=n)
+            _TR.emit("pool", "dedup_hit" if n > 0 else "dedup_miss", run=n,
+                     collisions=c)
         return np.asarray(pages).tolist(), n, np.asarray(free_hit).tolist()
 
     def acquire_prefix_async(self, kh, kl, ln, take):
@@ -717,6 +738,7 @@ class KVPool:
                 "prefix_lookups": self.prefix_lookups,
                 "prefix_hits": self.prefix_hits,
                 "prefix_inserts": self.prefix_inserts,
+                "prefix_collisions": self.prefix_collisions,
                 # harvest of the device-resident fold (counts only while
                 # tracing was enabled; zero otherwise)
                 "dedup_pages_hit": int(self._dev_hits)}
