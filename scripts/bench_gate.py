@@ -17,11 +17,21 @@ scratch file and this gate diffs the two:
   ``swap_failures``, ``dedup_misses``): fail when fresh exceeds the
   baseline in absolute terms.
 * the ``failures`` list must be empty in the fresh record.
+* **per-class / per-tenant slices are never latency-banded**: a class's
+  p99 over a few dozen requests is close to a max statistic, so banding
+  it against a full-run baseline flags scheduler noise, not regressions
+  (the overall percentiles, computed over the whole trace, stay gated).
 * everything else (counts, config echoes) is informational only.
 * fresh leaves with no baseline counterpart are reported as **new,
   unguarded** (informational, never failing): a bench grew a metric the
   committed baseline does not cover yet — re-record the baseline to put
   it under the gate.
+
+``--claim`` turns the unguarded report into action: a fresh record with
+no committed baseline is copied to ``BENCH_<name>.json`` wholesale, and
+unguarded leaves of an EXISTING baseline are merged in (existing values
+are never overwritten — guarded numbers stay whatever the committed run
+measured, so a claim can only widen coverage, never quietly re-band it).
 
 The default band is deliberately wide (``--tol 0.5``): CI runs on shared
 CPU where 2x timing noise is routine; the gate exists to catch order-of-
@@ -30,6 +40,7 @@ magnitude regressions and lost guarantees, not 5% drift.  Tighten with
 
     python scripts/bench_gate.py --fresh /tmp/BENCH_obs.json
     python scripts/bench_gate.py --fresh a.json b.json --tol 0.35
+    python scripts/bench_gate.py --fresh /tmp/BENCH_quant.json --claim
 """
 
 from __future__ import annotations
@@ -46,6 +57,9 @@ _LAT_SUFFIXES = ("_ns", "_us", "_ms", "_s")
 _GROW_FORBIDDEN = {"dropped", "drain_timeouts", "swap_failures",
                    "dedup_misses"}
 _SKIP_KEYS = {"mode", "backend", "jax", "model", "bench"}
+# subtrees whose numbers are small-sample slices of the trace: tail
+# percentiles there are max statistics, reported but never banded
+_SLICE_SUBTREES = ("per_class", "per_tenant")
 
 
 def _leaves(rec: Any, prefix: str = "") -> Iterator[Tuple[str, str, Any]]:
@@ -89,6 +103,8 @@ def compare(baseline: dict, fresh: dict, tol: float) -> List[str]:
                 if fv > bv:
                     bad.append(f"{path}: {fv} > baseline {bv} "
                                f"(must not grow)")
+            elif any(f".{s}." in f".{path}." for s in _SLICE_SUBTREES):
+                continue               # small-sample slice: never banded
             elif _is_latency(key):
                 if bv >= 0 and fv > bv * (1.0 + tol) + 1e-9:
                     bad.append(f"{path}: {fv} vs baseline {bv} "
@@ -109,6 +125,44 @@ def unguarded(baseline: dict, fresh: dict) -> List[str]:
     known = {path for path, _, _ in _leaves(baseline)}
     return [f"{path} = {fv!r}" for path, key, fv in _leaves(fresh)
             if path not in known and key not in _SKIP_KEYS]
+
+
+def _merge_missing(base: Any, fresh: Any) -> Any:
+    """Recursively add fresh dict keys absent from the baseline; existing
+    baseline values (including whole mismatched subtrees) are kept."""
+    if isinstance(base, dict) and isinstance(fresh, dict):
+        for k, v in fresh.items():
+            base[k] = _merge_missing(base[k], v) if k in base else v
+    return base
+
+
+def claim_file(fresh_path: Path, baseline_dir: Path) -> int:
+    """Adopt a fresh record as (part of) the committed baseline: copy it
+    wholesale when no ``BENCH_<name>.json`` exists, else merge only the
+    leaves the baseline lacks (the gate's "unguarded" set)."""
+    fresh = json.loads(fresh_path.read_text())
+    name = fresh.get("bench")
+    if not name:
+        print(f"{fresh_path}: no 'bench' key — cannot claim",
+              file=sys.stderr)
+        return 1
+    bpath = baseline_dir / f"BENCH_{name}.json"
+    if not bpath.exists():
+        bpath.write_text(json.dumps(fresh, indent=1) + "\n")
+        print(f"claimed {bpath.name}: new baseline from {fresh_path.name}")
+        return 0
+    baseline = json.loads(bpath.read_text())
+    new = unguarded(baseline, fresh)
+    if not new:
+        print(f"{bpath.name}: nothing unguarded to claim "
+              f"from {fresh_path.name}")
+        return 0
+    bpath.write_text(json.dumps(_merge_missing(baseline, fresh), indent=1)
+                     + "\n")
+    print(f"claimed {len(new)} new metric(s) into {bpath.name}:")
+    for n in new[:20]:
+        print(f"  {n}")
+    return 0
 
 
 def gate_file(fresh_path: Path, baseline_dir: Path, tol: float) -> int:
@@ -152,10 +206,17 @@ def main(argv=None) -> int:
                     help="where the committed BENCH_*.json live")
     ap.add_argument("--tol", type=float, default=0.5,
                     help="relative tolerance band (default 0.5 = ±50%%)")
+    ap.add_argument("--claim", action="store_true",
+                    help="instead of gating, adopt fresh records into the "
+                         "baseline dir: copy when no baseline exists, "
+                         "else merge only unguarded (missing) leaves")
     args = ap.parse_args(argv)
     rc = 0
     for f in args.fresh:
-        rc |= gate_file(Path(f), Path(args.baseline_dir), args.tol)
+        if args.claim:
+            rc |= claim_file(Path(f), Path(args.baseline_dir))
+        else:
+            rc |= gate_file(Path(f), Path(args.baseline_dir), args.tol)
     return rc
 
 

@@ -11,9 +11,11 @@
 #            traced step-latency overhead, noise-level disabled sites,
 #            chrome export validates) + benchmarks/slo.py (closed-loop
 #            admission holds p99 TTFT under a seeded burst, zero dropped,
-#            controller decisions on the timeline) + the bench-gate
-#            comparison against the committed BENCH_obs.json /
-#            BENCH_slo.json baselines
+#            controller decisions on the timeline) + benchmarks/quant.py
+#            (int8 pages >= 2x KV bytes/page, quant kernels inside the
+#            error bound, prefix-index collision rate < 0.05 on the Zipf
+#            trace) + the bench-gate comparison against the committed
+#            BENCH_obs.json / BENCH_slo.json / BENCH_quant.json baselines
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -50,6 +52,11 @@ run_chaos() {
     --scenario parking-model
   python -m repro.analysis.check --skip-src --skip-hlo \
     --mutation park-wakeup-lost
+
+  # quantized-page scale protocol: the checker must catch a CoW that
+  # copies page data but not its quant scale (stale-scale-on-realloc)
+  python -m repro.analysis.check --skip-src --skip-hlo \
+    --mutation cow-skips-scale
 }
 
 run_smoke_obs() {
@@ -60,16 +67,23 @@ run_smoke_obs() {
   # band is wide (the smoke workload is smaller than the committed full
   # record): it catches order-of-magnitude drift and lost boolean
   # guarantees; the tight <2% bound is asserted inside the bench itself.
-  local fresh fresh_slo
+  local fresh fresh_slo fresh_quant
   fresh="$(mktemp -t BENCH_obs_fresh.XXXXXX)"
   fresh_slo="$(mktemp -t BENCH_slo_fresh.XXXXXX)"
+  fresh_quant="$(mktemp -t BENCH_quant_fresh.XXXXXX)"
   python -m benchmarks.obs --smoke --out "$fresh"
   # closed-loop SLO gate: seeded burst trace, latency-feedback admission
   # vs static limits (zero dropped, tokens == dense reference, controller
   # decision events + Perfetto counter tracks in a validating export)
   python -m benchmarks.slo --smoke --out "$fresh_slo"
-  python scripts/bench_gate.py --fresh "$fresh" "$fresh_slo" --tol 4.0
-  rm -f "$fresh" "$fresh_slo"
+  # quantized paged-KV gate: int8 pages >= 2x smaller per page than bf16,
+  # quant kernels match the quant oracle and stay inside the documented
+  # error bound of fp32, set-associative prefix index holds collisions
+  # < 0.05 on the BENCH_slo Zipf key stream
+  python -m benchmarks.quant --smoke --out "$fresh_quant"
+  python scripts/bench_gate.py --fresh "$fresh" "$fresh_slo" \
+    "$fresh_quant" --tol 4.0
+  rm -f "$fresh" "$fresh_slo" "$fresh_quant"
 }
 
 if [[ "${1:-}" == "--lint" ]]; then
@@ -134,7 +148,8 @@ python -m benchmarks.prefill --smoke
 # -> stuck-lane scrub -> retried swap lands, still 0 dropped)
 python -m benchmarks.hotswap --smoke
 
-# observability overhead gates + closed-loop SLO gate + perf-regression
-# gate vs the committed BENCH_obs.json / BENCH_slo.json baselines (see
-# run_smoke_obs above / ci.sh --smoke)
+# observability overhead gates + closed-loop SLO gate + quantized-KV
+# gate + perf-regression gate vs the committed BENCH_obs.json /
+# BENCH_slo.json / BENCH_quant.json baselines (see run_smoke_obs above /
+# ci.sh --smoke)
 run_smoke_obs

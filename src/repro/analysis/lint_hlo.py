@@ -14,6 +14,11 @@ lease-held steps) and ``benchmarks/device_bravo.py`` / ``registry.py``
 * ``dense-kv-materialization`` — the lowered text of a paged step must not
   hold a dense ``(B, lanes * page_size, KVH, hd)`` gathered-KV buffer;
   the paged kernels stream pages instead of gathering them.
+* ``fp32-page-materialization`` — a *quantized*-store step must keep the
+  pool int8 end to end: the lowering must not hold a float32 buffer of
+  the pool's page shape (per-layer slice or full store) — dequantization
+  happens per block inside the kernel at DMA time, never as a whole-pool
+  upcast.
 * ``missing-donation`` — buffers the engine declares donated
   (``donate_argnums``) must actually alias in the lowering.  The engine's
   ``jit_step`` disables donation on CPU (XLA:CPU ignores it), so the lint
@@ -56,13 +61,23 @@ class Finding:
         return f"{self.rule}: [{self.where}] {self.message}"
 
 
-def find_shape(text: str, dims: Sequence[int]) -> bool:
+def find_shape(text: str, dims: Sequence[int],
+               dtype: Optional[str] = None) -> bool:
     """True if a tensor of exactly ``dims`` appears in ``text``.  Matches
     both StableHLO (``tensor<2x64x2x16xf32>``) and HLO (``f32[2,64,2,16]``)
     spellings; anchored so ``2x64...`` does not match inside ``12x64...``
-    or a longer shape."""
+    or a longer shape.
+
+    ``dtype=None`` matches any element type (the dense-KV rule: a gathered
+    buffer is wrong at every precision).  ``dtype="f32"`` narrows the match
+    to float32 tensors — the quantized-store rule, where the int8 pool
+    shape is *expected* in the lowering and only its fp32 twin is a bug."""
     mlir = "x".join(str(d) for d in dims)
     hlo = ",".join(str(d) for d in dims)
+    if dtype is not None:
+        return bool(
+            re.search(rf"(?<![0-9x]){mlir}x{dtype}\b", text)
+            or re.search(rf"\b{dtype}\[{hlo}\]", text))
     return bool(
         re.search(rf"(?<![0-9x]){mlir}x[a-z]", text)
         or re.search(rf"\[{hlo}\]", text))
@@ -87,6 +102,7 @@ def find_transfers(compiled_text: str, where: str = "") -> List[Finding]:
 
 def lint_step(name: str, lowered: str, compiled: Optional[str] = None,
               forbid_shapes: Iterable[Sequence[int]] = (),
+              forbid_fp32_shapes: Iterable[Sequence[int]] = (),
               require_donation: bool = False) -> List[Finding]:
     """All findings for one jitted step."""
     out: List[Finding] = []
@@ -99,6 +115,14 @@ def lint_step(name: str, lowered: str, compiled: Optional[str] = None,
                 f"lowering materializes a dense "
                 f"{'x'.join(str(d) for d in dims)} KV buffer — the paged "
                 f"path must stream pages, not gather them"))
+    for dims in forbid_fp32_shapes:
+        if find_shape(lowered, dims, dtype="f32"):
+            out.append(Finding(
+                "fp32-page-materialization", name,
+                f"lowering holds a float32 "
+                f"{'x'.join(str(d) for d in dims)} page buffer — a "
+                f"quantized store must dequantize per block in the "
+                f"kernel, never upcast the pool"))
     if require_donation and not has_donation(lowered):
         out.append(Finding(
             "missing-donation", name,
@@ -143,6 +167,14 @@ def serving_steps(cfg=None, compile_steps: bool = True) -> Dict[str, dict]:
     dense_kv = (B, lanes * page_size, cfg.n_kv_heads, cfg.hd)
 
     paged_kv = M.init_paged_caches(cfg, n_pages, page_size)
+    paged_kv_q = M.init_paged_caches(cfg, n_pages, page_size,
+                                     quantized=True)
+    # the int8 pool's fp32 twins: a quantized step holding either one has
+    # dequantized outside the kernel
+    pool_fp32 = [
+        (n_pages, page_size, cfg.n_kv_heads, cfg.hd),
+        (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.hd),
+    ]
     caches = M.init_caches(cfg, B, lanes * page_size)
     tokens = jnp.zeros((B, T), jnp.int32)
     token = jnp.zeros((B, 1), jnp.int32)
@@ -154,28 +186,40 @@ def serving_steps(cfg=None, compile_steps: bool = True) -> Dict[str, dict]:
     def copy_page(kv, src, dst):
         return jax.tree.map(lambda x: x.at[:, dst].set(x[:, src]), kv)
 
-    specs: List[Tuple[str, object, tuple, tuple, list]] = [
-        # (name, fn, args, donate_argnums, forbidden shapes)
+    specs: List[Tuple[str, object, tuple, tuple, list, list]] = [
+        # (name, fn, args, donate_argnums, forbidden dense shapes,
+        #  forbidden fp32 pool shapes)
         ("prefill", make_prefill_step(cfg, mesh, rules),
-         (params, {"tokens": tokens}), (), []),
+         (params, {"tokens": tokens}), (), [], []),
         ("decode", make_decode_step(cfg, mesh, rules),
-         (params, caches, token, clen), (), []),
+         (params, caches, token, clen), (), [], []),
         ("decode_paged", make_decode_step(cfg, mesh, rules, paged=True),
-         (params, paged_kv, token, clen, pages), (1,), [dense_kv]),
+         (params, paged_kv, token, clen, pages), (1,), [dense_kv], []),
         ("prefill_paged", make_paged_prefill_step(cfg, mesh, rules),
          (params, paged_kv, tokens, clen, chunk_lens, pages), (1,),
-         [dense_kv]),
-        ("copy_page", copy_page, (paged_kv, src, src), (0,), []),
+         [dense_kv], []),
+        # quantized store: same steps over the int8 pool — still no dense
+        # gather, and additionally no fp32 page buffer anywhere in the
+        # lowering (dequant lives inside the kernel)
+        ("decode_paged_quant",
+         make_decode_step(cfg, mesh, rules, paged=True),
+         (params, paged_kv_q, token, clen, pages), (1,), [dense_kv],
+         pool_fp32),
+        ("prefill_paged_quant", make_paged_prefill_step(cfg, mesh, rules),
+         (params, paged_kv_q, tokens, clen, chunk_lens, pages), (1,),
+         [dense_kv], pool_fp32),
+        ("copy_page", copy_page, (paged_kv, src, src), (0,), [], []),
     ]
 
     out: Dict[str, dict] = {}
-    for name, fn, args, donate, forbid in specs:
+    for name, fn, args, donate, forbid, forbid_f32 in specs:
         lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
         d = {
             "lowered": lowered.as_text(),
             "compiled": (lowered.compile().as_text() if compile_steps
                          else None),
             "forbid_shapes": forbid,
+            "forbid_fp32_shapes": forbid_f32,
             "require_donation": bool(donate),
         }
         out[name] = d

@@ -33,6 +33,10 @@ them:
 * ``park-wakeup-lost`` — the PR-7 writer-parking hazard: the finishing
   writer drops the park-word bump + wake, so a writer parked on its drain
   gate sleeps forever (caught by the built-in deadlock invariant).
+* ``cow-skips-scale`` — the quantized-store COW hazard (PR 10): the
+  copy-on-write divergence copies a page's int8 bytes but not its
+  dequantization scale, so the private copy decodes with whatever scale
+  the destination page last had (caught by the stale-scale ghost set).
 """
 
 from __future__ import annotations
@@ -679,6 +683,136 @@ def build_kvpool_model(mem: Mem, mutation: Optional[str] = None) -> Instance:
 
 
 # ---------------------------------------------------------------------------
+# S5 — quantized page store: scale metadata vs the owner-vector contract
+# ---------------------------------------------------------------------------
+
+
+class QuantScaleModel(KVPoolModel):
+    """:class:`KVPoolModel` plus the PR-10 quantized store's per-page
+    dequantization ``scale`` word.  The scale is pool METADATA under the
+    same owner-vector contract as the page bytes: written only while the
+    page is privately owned, never through a shared page, and ALWAYS
+    rewritten before new data lands on a (re)allocated page — int8 bytes
+    are meaningless under the previous tenant's scale."""
+
+    def __init__(self, mem: Mem, n_pages: int = 3,
+                 cow_scale_bug: bool = False):
+        super().__init__(mem, n_pages)
+        self.scale = mem.alloc_array("pool.scale", n_pages)
+        self.cow_scale_bug = cow_scale_bug
+
+    def write_quant(self, p: int, val: int, sc: int) -> None:
+        """Quantize-and-scatter: the scale store PRECEDES the data store,
+        so at no point does the page hold new bytes under an old scale."""
+        self.scale.cell(p).store(sc)
+        self.write(p, val)
+
+
+def build_quant_scale_model(mem: Mem,
+                            mutation: Optional[str] = None) -> Instance:
+    """Producer publishes a quantized page; a modifier takes a ref and
+    diverges copy-on-write (bytes AND scale — or, mutated, bytes only); a
+    reader dequantizes the shared page.  The ghost ``needs_fresh`` set
+    tracks pages whose owner went FREE -> rid without a scale store yet:
+    data landing on such a page is the stale-scale-on-realloc bug, and a
+    scale store on a shared page is the shared-scale-rewrite bug."""
+    model = QuantScaleModel(mem, n_pages=3,
+                            cow_scale_bug=(mutation == "cow-skips-scale"))
+    mailbox = mem.alloc("mailbox")           # published page + 1 (0 = none)
+    rid_of = {0: 1, 1: 2, 2: 3}              # ghost: tid -> request id
+    prev_owner = {p: FREE for p in range(model.owner.n)}
+    needs_fresh: set = set()                 # ghost: alloc'd, scale stale
+    shared_page = SimpleNamespace(p=None)
+
+    def t_producer():                        # tid 0, rid 1
+        p = model.alloc(1)
+        model.write_quant(p, 11, 5)          # bytes 11 under scale 5
+        model.insert_shared(p, 1)
+        shared_page.p = p
+        mailbox.store(p + 1)
+
+    def t_modifier():                        # tid 1, rid 2
+        mem.wait_while(mailbox, lambda v: v == 0)
+        p = mailbox.load() - 1
+        if not model.acquire_ref(p):
+            return
+        d = model.data.cell(p).load()        # read the shared prefix...
+        s = model.scale.cell(p).load()       # ...and its scale
+        q = model.alloc(2)                   # COW: diverge onto a new page
+        if model.cow_scale_bug:              # MUTATION cow-skips-scale
+            model.write(q, d)                # bytes copied, scale not
+        else:
+            model.write_quant(q, d, s)       # content + scale as one unit
+        model.write_quant(q, 22, 7)          # the divergent requant
+        model.reclaim(q, 2)
+        model.release_ref(p)
+
+    def t_reader():                          # tid 2, rid 3
+        mem.wait_while(mailbox, lambda v: v == 0)
+        p = mailbox.load() - 1
+        if not model.acquire_ref(p):
+            return
+        model.scale.cell(p).load()           # dequant reads scale first
+        model.data.cell(p).load()
+        model.release_ref(p)
+
+    def check(ev):
+        # (I9) the owner encoding itself, as in S4 — and the ghost set:
+        # a page entering private ownership from FREE owes a scale store
+        # before any data store.
+        for p in range(model.owner.n):
+            cur = peek(mem, model.owner.cell(p))
+            old = prev_owner[p]
+            if cur != old:
+                prev_owner[p] = cur
+                if not _legal_owner_transition(old, cur):
+                    raise InvariantViolation(
+                        "owner-encoding",
+                        f"owner[{p}]: illegal transition {old} -> {cur}")
+                if old == FREE and cur >= 0:
+                    needs_fresh.add(p)       # fresh tenant, stale scale
+        if ev.kind != "store":
+            return
+        if model.scale.base <= ev.index < model.scale.base + model.scale.n:
+            p = ev.index - model.scale.base
+            ov = peek(mem, model.owner.cell(p))
+            rid = rid_of[ev.tid]
+            # (I14) a shared page's scale is immutable: rewriting it would
+            # silently re-decode every reference-holder's bytes.
+            if ov <= -2:
+                raise InvariantViolation(
+                    "shared-scale-rewrite",
+                    f"T{ev.tid} (rid {rid}) rewrote scale[{p}] while "
+                    f"shared (owner={ov}, refcount={-1 - ov})")
+            if ov != rid:
+                raise InvariantViolation(
+                    "shared-scale-rewrite",
+                    f"T{ev.tid} (rid {rid}) wrote scale[{p}] on a page "
+                    f"it does not own (owner={ov})")
+            needs_fresh.discard(p)           # the owed store landed
+        if model.data.base <= ev.index < model.data.base + model.data.n:
+            p = ev.index - model.data.base
+            # (I15) no bytes under a stale scale: a (re)allocated page's
+            # data store must be preceded by its own scale store.
+            if p in needs_fresh:
+                raise InvariantViolation(
+                    "stale-scale-on-realloc",
+                    f"T{ev.tid} stored data[{p}] before refreshing its "
+                    f"scale — bytes would decode under the previous "
+                    f"tenant's scale")
+
+    def at_end():
+        p = shared_page.p
+        if p is not None and peek(mem, model.scale.cell(p)) != 5:
+            raise InvariantViolation(
+                "shared-scale-rewrite",
+                f"shared page {p} scale mutated to "
+                f"{peek(mem, model.scale.cell(p))}")
+
+    return Instance([t_producer, t_modifier, t_reader], check, at_end)
+
+
+# ---------------------------------------------------------------------------
 # S6 — latency-feedback admission controller (real policy code, PR 9)
 # ---------------------------------------------------------------------------
 
@@ -791,6 +925,9 @@ SCENARIOS: Dict[str, Scenario] = {
                               max_schedules=10000),
     "kvpool-model": Scenario("kvpool-model", 3, build_kvpool_model,
                              max_schedules=6000),
+    "quant-scale-model": Scenario("quant-scale-model", 3,
+                                  build_quant_scale_model,
+                                  max_schedules=6000),
     "controller-model": Scenario("controller-model", 2,
                                  build_controller_model,
                                  max_schedules=4000),
@@ -802,5 +939,6 @@ MUTATIONS: Dict[str, str] = {
     "drain-off-by-one": "registry-model",
     "park-wakeup-lost": "parking-model",
     "cow-write-through": "kvpool-model",
+    "cow-skips-scale": "quant-scale-model",
     "ctrl-recovery-dropped": "controller-model",
 }

@@ -7,11 +7,15 @@ TPU they compile to Mosaic.
 
 from __future__ import annotations
 
+import functools
+import json
+import pathlib
+
 import jax
 import jax.numpy as jnp
 
-from .paged_attn import _paged_attn_call
-from .paged_chunk_attn import _chunk_attn_call
+from .paged_attn import _paged_attn_call, _paged_attn_quant_call
+from .paged_chunk_attn import _chunk_attn_call, _chunk_attn_quant_call
 from .table_publish import (_fused_publish_call, _fused_publish_multi_call,
                             _publish_call)
 from .table_scan import LANES, _multi_poll_call, _poll_call, _scan_call
@@ -19,11 +23,38 @@ from .table_scan import LANES, _multi_poll_call, _poll_call, _scan_call
 __all__ = ["as_table2d", "revocation_scan", "revocation_poll",
            "revocation_poll_multi", "publish", "clear", "fused_publish",
            "fused_publish_multi", "fused_clear", "paged_attention",
-           "paged_chunk_attention", "jit_donating", "LANES"]
+           "paged_attention_quant", "paged_chunk_attention",
+           "paged_chunk_attention_quant", "jit_donating", "LANES"]
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# Autotune table: ``kernels/autotune.py`` sweeps the paged kernels' knobs
+# (pages-per-DMA-lane for decode, q-block height for chunk prefill) per
+# backend and persists the winners next to this module; the wrappers below
+# read them here.  Missing file / backend / knob falls back to the default
+# — an untuned backend is never an error.
+# --------------------------------------------------------------------------
+
+_TUNING_PATH = pathlib.Path(__file__).with_name("tuning_table.json")
+
+
+@functools.lru_cache(maxsize=None)
+def _tuning() -> dict:
+    try:
+        return json.loads(_TUNING_PATH.read_text())
+    except (OSError, ValueError):
+        return {}
+
+
+@functools.lru_cache(maxsize=None)
+def _tuned(kernel: str, knob: str, default: int) -> int:
+    entry = _tuning().get(kernel, {}).get(jax.default_backend(), {})
+    v = entry.get(knob, default)
+    return v if isinstance(v, int) and v > 0 else default
 
 
 def jit_donating(fn, n_donated: int, **jit_kw):
@@ -112,7 +143,23 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     VMEM via scalar-prefetched block indices — the dense (B, S, KVH, hd)
     cache is never materialized."""
     return _paged_attn_call(q, k_pages, v_pages, page_idx, cache_len,
-                            interpret=_interpret())
+                            interpret=_interpret(),
+                            lanes_per_step=_tuned("paged_attn",
+                                                  "lanes_per_step", 1))
+
+
+def paged_attention_quant(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, k_scale: jax.Array,
+                          v_scale: jax.Array, page_idx: jax.Array,
+                          cache_len: jax.Array) -> jax.Array:
+    """Quantized-pool decode attention: same contract as
+    :func:`paged_attention` with int8 k/v_pages and (n_pages, KVH) float32
+    per-page scales (``kernels.quant`` layout); pages dequantize inside
+    the kernel at DMA time — no fp32 page copy is ever materialized."""
+    return _paged_attn_quant_call(
+        q, k_pages, v_pages, k_scale, v_scale, page_idx, cache_len,
+        interpret=_interpret(),
+        lanes_per_step=_tuned("paged_attn_quant", "lanes_per_step", 1))
 
 
 def paged_chunk_attention(q: jax.Array, k_pages: jax.Array,
@@ -128,8 +175,27 @@ def paged_chunk_attention(q: jax.Array, k_pages: jax.Array,
     zero.  Pages stream through VMEM via scalar-prefetched block indices —
     the dense (B, lanes * page_size, KVH, hd) gather of the PR-4 prefill
     path is never materialized."""
+    s = q.shape[1]
+    bq = _tuned("paged_chunk_attn", "block_q", 0)
     return _chunk_attn_call(q, k_pages, v_pages, page_idx, cache_len,
-                            new_lens, interpret=_interpret())
+                            new_lens, interpret=_interpret(),
+                            block_q=bq if bq and s % bq == 0 else 0)
+
+
+def paged_chunk_attention_quant(q: jax.Array, k_pages: jax.Array,
+                                v_pages: jax.Array, k_scale: jax.Array,
+                                v_scale: jax.Array, page_idx: jax.Array,
+                                cache_len: jax.Array,
+                                new_lens: jax.Array) -> jax.Array:
+    """Quantized-pool chunk-prefill attention: same contract as
+    :func:`paged_chunk_attention` with int8 k/v_pages and (n_pages, KVH)
+    float32 per-page scales; dequantization happens in VMEM."""
+    s = q.shape[1]
+    bq = _tuned("paged_chunk_attn_quant", "block_q", 0)
+    return _chunk_attn_quant_call(
+        q, k_pages, v_pages, k_scale, v_scale, page_idx, cache_len,
+        new_lens, interpret=_interpret(),
+        block_q=bq if bq and s % bq == 0 else 0)
 
 
 def revocation_poll(table2d: jax.Array, lock_id) -> jax.Array:

@@ -39,80 +39,124 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _paged_attn_kernel(pi_ref, cl_ref, q_ref, k_ref, v_ref, o_ref,
-                       m_ref, l_ref, acc_ref):
-    b = pl.program_id(0)
-    p = pl.program_id(1)
-    n_p = pl.num_programs(1)
+def _make_paged_attn_kernel(lanes_per_step: int, quantized: bool):
+    """Kernel factory.  ``lanes_per_step`` (autotune knob): how many page
+    lanes each grid step consumes — every lane is its own scalar-prefetched
+    (1, ps, KVH, hd) block, so a step with k lanes has k independent DMAs
+    in flight instead of one per step.  ``quantized``: the page blocks are
+    int8 and each is followed by its (1, KVH) float32 per-page scale block
+    (fetched through the SAME page-index map); dequantization is one cast
+    + broadcast multiply at DMA time, inside VMEM — no fp32 copy of any
+    page ever exists outside the kernel."""
+    per_lane = 4 if quantized else 2
 
-    @pl.when(p == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    def kernel(pi_ref, cl_ref, q_ref, *refs):
+        kv_refs = refs[:lanes_per_step * per_lane]
+        o_ref, m_ref, l_ref, acc_ref = refs[-4:]
+        b = pl.program_id(0)
+        step = pl.program_id(1)
+        n_steps = pl.num_programs(1)
 
-    ps, kvh, hd = k_ref.shape[1], k_ref.shape[2], k_ref.shape[3]
-    h = q_ref.shape[1]
-    g = h // kvh
-    scale = 1.0 / math.sqrt(hd)
+        @pl.when(step == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    page = pi_ref[b, p]
-    clen = cl_ref[b]
-    # positions this page covers; invalid lanes (past the request's length,
-    # or an unallocated -1 page clamped to 0 by the index map) are masked
-    pos = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
-    valid = (pos < clen) & (page >= 0)                    # (1, ps)
+        k0 = kv_refs[0]
+        ps, kvh, hd = k0.shape[1], k0.shape[2], k0.shape[3]
+        h = q_ref.shape[1]
+        g = h // kvh
+        scale = 1.0 / math.sqrt(hd)
+        q = q_ref[0].astype(jnp.float32)                  # (H, hd)
+        qh = q.reshape(kvh, g, hd)                        # heads grouped by
+        clen = cl_ref[b]                                  # their kv head
 
-    q = q_ref[0].astype(jnp.float32)                      # (H, hd)
-    k = k_ref[0].astype(jnp.float32)                      # (ps, KVH, hd)
-    v = v_ref[0].astype(jnp.float32)
-    qh = q.reshape(kvh, g, hd)                            # heads grouped by
-    s = jnp.einsum("kgd,skd->kgs", qh, k,                 # their kv head
-                   preferred_element_type=jnp.float32) * scale
-    s = s.reshape(h, ps)
-    s = jnp.where(valid, s, -jnp.inf)
+        for j in range(lanes_per_step):
+            lane = kv_refs[per_lane * j:per_lane * (j + 1)]
+            p = step * lanes_per_step + j
+            page = pi_ref[b, p]
+            # positions this page covers; invalid lanes (past the request's
+            # length, or an unallocated/padding -1 page clamped to 0 by the
+            # index map) are masked
+            pos = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+            valid = (pos < clen) & (page >= 0)            # (1, ps)
 
-    m_prev = m_ref[...]                                   # (H, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-    pexp = jnp.where(valid, jnp.exp(s - m_safe), 0.0)     # (H, ps)
-    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(pexp, axis=1, keepdims=True)
-    pv = jnp.einsum("kgs,skd->kgd", pexp.reshape(kvh, g, ps), v,
-                    preferred_element_type=jnp.float32)
-    acc_ref[...] = acc_ref[...] * corr + pv.reshape(h, hd)
-    m_ref[...] = m_new
+            if quantized:
+                k_ref, v_ref, ks_ref, vs_ref = lane
+                k = k_ref[0].astype(jnp.float32) * ks_ref[0][None, :, None]
+                v = v_ref[0].astype(jnp.float32) * vs_ref[0][None, :, None]
+            else:
+                k_ref, v_ref = lane
+                k = k_ref[0].astype(jnp.float32)          # (ps, KVH, hd)
+                v = v_ref[0].astype(jnp.float32)
+            s = jnp.einsum("kgd,skd->kgs", qh, k,
+                           preferred_element_type=jnp.float32) * scale
+            s = s.reshape(h, ps)
+            s = jnp.where(valid, s, -jnp.inf)
 
-    @pl.when(p == n_p - 1)
-    def _emit():
-        l = jnp.maximum(l_ref[...], 1e-20)                # fully-masked rows
-        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)  # (inactive slots)
-        #                                                    emit zeros
+            m_prev = m_ref[...]                           # (H, 1)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            pexp = jnp.where(valid, jnp.exp(s - m_safe), 0.0)   # (H, ps)
+            corr = jnp.where(jnp.isfinite(m_prev),
+                             jnp.exp(m_prev - m_safe), 0.0)
+            l_ref[...] = l_ref[...] * corr \
+                + jnp.sum(pexp, axis=1, keepdims=True)
+            pv = jnp.einsum("kgs,skd->kgd", pexp.reshape(kvh, g, ps), v,
+                            preferred_element_type=jnp.float32)
+            acc_ref[...] = acc_ref[...] * corr + pv.reshape(h, hd)
+            m_ref[...] = m_new
+
+        @pl.when(step == n_steps - 1)
+        def _emit():
+            l = jnp.maximum(l_ref[...], 1e-20)            # fully-masked rows
+            o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)  # (inactive
+            #                                               slots) emit zeros
+    return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _paged_attn_call(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
-                     page_idx: jax.Array, cache_len: jax.Array,
-                     interpret: bool = False) -> jax.Array:
-    """q: (B, H, hd); k/v_pages: (n_pages, ps, KVH, hd); page_idx: (B, P)
-    int32 (-1 = unused lane); cache_len: (B,) valid lengths.  -> (B, H, hd).
-    """
+def _paged_attn_common(q, kv_operands, page_idx, cache_len, interpret,
+                       lanes_per_step):
+    """Shared call-path for the fp32 and quantized kernels.
+    ``kv_operands`` is (k_pages, v_pages[, k_scale, v_scale])."""
     b, h, hd = q.shape
-    _, ps, kvh, _ = k_pages.shape
-    n_p = page_idx.shape[1]
+    _, ps, kvh, _ = kv_operands[0].shape
     assert h % kvh == 0, (h, kvh)
+    lps = max(1, lanes_per_step)
+    n_p = page_idx.shape[1]
+    pad = -n_p % lps
+    if pad:     # -1 padding lanes are exact no-ops in the online softmax
+        page_idx = jnp.concatenate(
+            [page_idx, jnp.full((b, pad), -1, page_idx.dtype)], axis=1)
+        n_p += pad
+    quantized = len(kv_operands) == 4
 
-    def kv_map(bi, pi, idx_ref, cl_ref):
-        return (jnp.maximum(idx_ref[bi, pi], 0), 0, 0, 0)
+    def kv_map(j):
+        def m(bi, pi, idx_ref, cl_ref):
+            return (jnp.maximum(idx_ref[bi, pi * lps + j], 0), 0, 0, 0)
+        return m
+
+    def scale_map(j):
+        def m(bi, pi, idx_ref, cl_ref):
+            return (jnp.maximum(idx_ref[bi, pi * lps + j], 0), 0)
+        return m
+
+    in_specs = [pl.BlockSpec((1, h, hd), lambda bi, pi, idx, cl: (bi, 0, 0))]
+    operands = []
+    for j in range(lps):
+        in_specs += [pl.BlockSpec((1, ps, kvh, hd), kv_map(j)),
+                     pl.BlockSpec((1, ps, kvh, hd), kv_map(j))]
+        operands += [kv_operands[0], kv_operands[1]]
+        if quantized:
+            in_specs += [pl.BlockSpec((1, kvh), scale_map(j)),
+                         pl.BlockSpec((1, kvh), scale_map(j))]
+            operands += [kv_operands[2], kv_operands[3]]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,            # page_idx, cache_len
-        grid=(b, n_p),
-        in_specs=[
-            pl.BlockSpec((1, h, hd), lambda bi, pi, idx, cl: (bi, 0, 0)),
-            pl.BlockSpec((1, ps, kvh, hd), kv_map),
-            pl.BlockSpec((1, ps, kvh, hd), kv_map),
-        ],
+        grid=(b, n_p // lps),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, h, hd), lambda bi, pi, idx, cl: (bi, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((h, 1), jnp.float32),    # running max
@@ -121,9 +165,35 @@ def _paged_attn_call(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         ],
     )
     return pl.pallas_call(
-        _paged_attn_kernel,
+        _make_paged_attn_kernel(lps, quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
         interpret=interpret,
     )(page_idx.astype(jnp.int32), cache_len.astype(jnp.int32),
-      q, k_pages, v_pages)
+      q, *operands)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "lanes_per_step"))
+def _paged_attn_call(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     page_idx: jax.Array, cache_len: jax.Array,
+                     interpret: bool = False,
+                     lanes_per_step: int = 1) -> jax.Array:
+    """q: (B, H, hd); k/v_pages: (n_pages, ps, KVH, hd); page_idx: (B, P)
+    int32 (-1 = unused lane); cache_len: (B,) valid lengths.  -> (B, H, hd).
+    """
+    return _paged_attn_common(q, (k_pages, v_pages), page_idx, cache_len,
+                              interpret, lanes_per_step)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "lanes_per_step"))
+def _paged_attn_quant_call(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, k_scale: jax.Array,
+                           v_scale: jax.Array, page_idx: jax.Array,
+                           cache_len: jax.Array, interpret: bool = False,
+                           lanes_per_step: int = 1) -> jax.Array:
+    """Quantized-pool variant: k/v_pages are (n_pages, ps, KVH, hd) int8
+    and k/v_scale (n_pages, KVH) float32 per-page scales; both ride the
+    same scalar-prefetched page-index path and pages dequantize in VMEM
+    (``kernels.quant``).  Same shapes/masking otherwise."""
+    return _paged_attn_common(q, (k_pages, v_pages, k_scale, v_scale),
+                              page_idx, cache_len, interpret, lanes_per_step)

@@ -59,63 +59,129 @@ def _pick_block_q(s: int, limit: int = 32) -> int:
     raise AssertionError(s)          # unreachable: 1 divides everything
 
 
-def _chunk_attn_kernel(pi_ref, cl_ref, nl_ref, q_ref, k_ref, v_ref, o_ref,
-                       m_ref, l_ref, acc_ref):
-    b = pl.program_id(0)
-    qi = pl.program_id(1)
-    p = pl.program_id(2)
-    n_p = pl.num_programs(2)
+def _make_chunk_attn_kernel(quantized: bool):
+    """Kernel factory.  ``quantized``: the page blocks are int8 and each is
+    followed by its (1, KVH) float32 per-page scale block (fetched through
+    the SAME page-index map); dequantization is one cast + broadcast
+    multiply at DMA time, inside VMEM — no fp32 copy of any page ever
+    exists outside the kernel."""
 
-    @pl.when(p == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    def kernel(pi_ref, cl_ref, nl_ref, q_ref, *refs):
+        if quantized:
+            k_ref, v_ref, ks_ref, vs_ref = refs[:4]
+        else:
+            k_ref, v_ref = refs[:2]
+        o_ref, m_ref, l_ref, acc_ref = refs[-4:]
+        b = pl.program_id(0)
+        qi = pl.program_id(1)
+        p = pl.program_id(2)
+        n_p = pl.num_programs(2)
 
-    ps, kvh, hd = k_ref.shape[1], k_ref.shape[2], k_ref.shape[3]
-    bq, h = q_ref.shape[1], q_ref.shape[2]
-    n_q = pl.num_programs(1)
-    s_total = bq * n_q
-    g = h // kvh
-    scale = 1.0 / math.sqrt(hd)
+        @pl.when(p == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    page = pi_ref[b, p]
-    clen = cl_ref[b]
-    nl = nl_ref[b]
-    # absolute positions: queries are the chunk's right-aligned columns,
-    # keys are this page's slots; invalid lanes / padding columns masked
-    col = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
-    q_pos = clen - s_total + col                           # (bq, 1)
-    valid_q = (col >= s_total - nl) & (q_pos >= 0)
-    t_pos = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
-    valid = (t_pos < clen) & (page >= 0) & (t_pos <= q_pos) & valid_q
+        ps, kvh, hd = k_ref.shape[1], k_ref.shape[2], k_ref.shape[3]
+        bq, h = q_ref.shape[1], q_ref.shape[2]
+        n_q = pl.num_programs(1)
+        s_total = bq * n_q
+        g = h // kvh
+        scale = 1.0 / math.sqrt(hd)
 
-    q = q_ref[0].astype(jnp.float32)                       # (bq, H, hd)
-    k = k_ref[0].astype(jnp.float32)                       # (ps, KVH, hd)
-    v = v_ref[0].astype(jnp.float32)
-    qh = q.reshape(bq, kvh, g, hd)                         # heads grouped by
-    s = jnp.einsum("qkgd,skd->qkgs", qh, k,                # their kv head
-                   preferred_element_type=jnp.float32) * scale
-    s = s.reshape(bq, h, ps)
-    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+        page = pi_ref[b, p]
+        clen = cl_ref[b]
+        nl = nl_ref[b]
+        # absolute positions: queries are the chunk's right-aligned columns,
+        # keys are this page's slots; invalid lanes / padding columns masked
+        col = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+        q_pos = clen - s_total + col                       # (bq, 1)
+        valid_q = (col >= s_total - nl) & (q_pos >= 0)
+        t_pos = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        valid = (t_pos < clen) & (page >= 0) & (t_pos <= q_pos) & valid_q
 
-    m_prev = m_ref[...]                                    # (bq, H)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
-    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-    pexp = jnp.where(valid[:, None, :],
-                     jnp.exp(s - m_safe[:, :, None]), 0.0)  # (bq, H, ps)
-    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(pexp, axis=2)
-    pv = jnp.einsum("qkgs,skd->qkgd", pexp.reshape(bq, kvh, g, ps), v,
-                    preferred_element_type=jnp.float32)
-    acc_ref[...] = acc_ref[...] * corr[:, :, None] + pv.reshape(bq, h, hd)
-    m_ref[...] = m_new
+        q = q_ref[0].astype(jnp.float32)                   # (bq, H, hd)
+        if quantized:
+            k = k_ref[0].astype(jnp.float32) * ks_ref[0][None, :, None]
+            v = v_ref[0].astype(jnp.float32) * vs_ref[0][None, :, None]
+        else:
+            k = k_ref[0].astype(jnp.float32)               # (ps, KVH, hd)
+            v = v_ref[0].astype(jnp.float32)
+        qh = q.reshape(bq, kvh, g, hd)                     # heads grouped by
+        s = jnp.einsum("qkgd,skd->qkgs", qh, k,            # their kv head
+                       preferred_element_type=jnp.float32) * scale
+        s = s.reshape(bq, h, ps)
+        s = jnp.where(valid[:, None, :], s, -jnp.inf)
 
-    @pl.when(p == n_p - 1)
-    def _emit():
-        l = jnp.maximum(l_ref[...], 1e-20)                 # fully-masked rows
-        o_ref[0] = (acc_ref[...] / l[:, :, None]).astype(o_ref.dtype)
-        #                                                    (padding) emit 0
+        m_prev = m_ref[...]                                # (bq, H)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        pexp = jnp.where(valid[:, None, :],
+                         jnp.exp(s - m_safe[:, :, None]), 0.0)  # (bq, H, ps)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(pexp, axis=2)
+        pv = jnp.einsum("qkgs,skd->qkgd", pexp.reshape(bq, kvh, g, ps), v,
+                        preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, :, None] \
+            + pv.reshape(bq, h, hd)
+        m_ref[...] = m_new
+
+        @pl.when(p == n_p - 1)
+        def _emit():
+            l = jnp.maximum(l_ref[...], 1e-20)             # fully-masked rows
+            o_ref[0] = (acc_ref[...] / l[:, :, None]).astype(o_ref.dtype)
+            #                                                (padding) emit 0
+    return kernel
+
+
+def _chunk_attn_common(q, kv_operands, page_idx, cache_len, new_lens,
+                       interpret, block_q):
+    """Shared call-path for the fp32 and quantized kernels.
+    ``kv_operands`` is (k_pages, v_pages[, k_scale, v_scale])."""
+    b, s, h, hd = q.shape
+    _, ps, kvh, _ = kv_operands[0].shape
+    n_p = page_idx.shape[1]
+    assert h % kvh == 0, (h, kvh)
+    bq = block_q or _pick_block_q(s)
+    assert s % bq == 0, (s, bq)
+    n_q = s // bq
+    quantized = len(kv_operands) == 4
+
+    def kv_map(bi, qi, p, idx_ref, cl_ref, nl_ref):
+        return (jnp.maximum(idx_ref[bi, p], 0), 0, 0, 0)
+
+    def scale_map(bi, qi, p, idx_ref, cl_ref, nl_ref):
+        return (jnp.maximum(idx_ref[bi, p], 0), 0)
+
+    def q_map(bi, qi, p, idx_ref, cl_ref, nl_ref):
+        return (bi, qi, 0, 0)
+
+    in_specs = [pl.BlockSpec((1, bq, h, hd), q_map),
+                pl.BlockSpec((1, ps, kvh, hd), kv_map),
+                pl.BlockSpec((1, ps, kvh, hd), kv_map)]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, kvh), scale_map),
+                     pl.BlockSpec((1, kvh), scale_map)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,            # page_idx, cache_len, new_lens
+        grid=(b, n_q, n_p),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bq, h, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((bq, h), jnp.float32),      # running max
+            pltpu.VMEM((bq, h), jnp.float32),      # running denominator
+            pltpu.VMEM((bq, h, hd), jnp.float32),  # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        _make_chunk_attn_kernel(quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, s, h, hd), q.dtype),
+        interpret=interpret,
+    )(page_idx.astype(jnp.int32), cache_len.astype(jnp.int32),
+      new_lens.astype(jnp.int32), q, *kv_operands)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_q"))
@@ -127,39 +193,21 @@ def _chunk_attn_call(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     hd); page_idx: (B, P) int32 (-1 = unused lane); cache_len: (B,) total
     valid length AFTER the chunk; new_lens: (B,) valid trailing columns.
     -> (B, S, H, hd) (padding columns zero)."""
-    b, s, h, hd = q.shape
-    _, ps, kvh, _ = k_pages.shape
-    n_p = page_idx.shape[1]
-    assert h % kvh == 0, (h, kvh)
-    bq = block_q or _pick_block_q(s)
-    assert s % bq == 0, (s, bq)
-    n_q = s // bq
+    return _chunk_attn_common(q, (k_pages, v_pages), page_idx, cache_len,
+                              new_lens, interpret, block_q)
 
-    def kv_map(bi, qi, p, idx_ref, cl_ref, nl_ref):
-        return (jnp.maximum(idx_ref[bi, p], 0), 0, 0, 0)
 
-    def q_map(bi, qi, p, idx_ref, cl_ref, nl_ref):
-        return (bi, qi, 0, 0)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,            # page_idx, cache_len, new_lens
-        grid=(b, n_q, n_p),
-        in_specs=[
-            pl.BlockSpec((1, bq, h, hd), q_map),
-            pl.BlockSpec((1, ps, kvh, hd), kv_map),
-            pl.BlockSpec((1, ps, kvh, hd), kv_map),
-        ],
-        out_specs=pl.BlockSpec((1, bq, h, hd), q_map),
-        scratch_shapes=[
-            pltpu.VMEM((bq, h), jnp.float32),      # running max
-            pltpu.VMEM((bq, h), jnp.float32),      # running denominator
-            pltpu.VMEM((bq, h, hd), jnp.float32),  # output accumulator
-        ],
-    )
-    return pl.pallas_call(
-        _chunk_attn_kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, s, h, hd), q.dtype),
-        interpret=interpret,
-    )(page_idx.astype(jnp.int32), cache_len.astype(jnp.int32),
-      new_lens.astype(jnp.int32), q, k_pages, v_pages)
+@functools.partial(jax.jit, static_argnames=("interpret", "block_q"))
+def _chunk_attn_quant_call(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, k_scale: jax.Array,
+                           v_scale: jax.Array, page_idx: jax.Array,
+                           cache_len: jax.Array, new_lens: jax.Array,
+                           interpret: bool = False,
+                           block_q: int = 0) -> jax.Array:
+    """Quantized-pool variant: k/v_pages are (n_pages, ps, KVH, hd) int8
+    and k/v_scale (n_pages, KVH) float32 per-page scales; both ride the
+    same scalar-prefetched page-index path and pages dequantize in VMEM
+    (``kernels.quant``).  Same shapes/masking otherwise."""
+    return _chunk_attn_common(q, (k_pages, v_pages, k_scale, v_scale),
+                              page_idx, cache_len, new_lens, interpret,
+                              block_q)

@@ -185,6 +185,113 @@ def paged_chunk_attn_ref(q: jax.Array, k_pages: jax.Array,
     return jnp.stack(outs).astype(q.dtype)
 
 
+def paged_attn_quant_ref(q: jax.Array, k_pages: jax.Array,
+                         v_pages: jax.Array, k_scale: jax.Array,
+                         v_scale: jax.Array, page_idx: jax.Array,
+                         cache_len: jax.Array) -> jax.Array:
+    """Oracle for the quantized decode kernel: identical page walk to
+    :func:`paged_attn_ref`, with the kernel's exact dequant op order
+    (int8 ``astype`` then one broadcast scale multiply per page) so
+    interpret-mode runs compare bit for bit.  k/v_pages int8, k/v_scale
+    (n_pages, KVH) float32."""
+
+    def deq(pages, scales, page):
+        i = jnp.clip(page, 0)
+        return pages[i].astype(jnp.float32) * scales[i][None, :, None]
+
+    b, h, hd = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    n_p = page_idx.shape[1]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    outs = []
+    for bi in range(b):
+        qh = q[bi].astype(jnp.float32).reshape(kvh, g, hd)
+        m = jnp.full((h, 1), -jnp.inf, jnp.float32)
+        den = jnp.zeros((h, 1), jnp.float32)
+        acc = jnp.zeros((h, hd), jnp.float32)
+        for p in range(n_p):
+            page = page_idx[bi, p]
+            k = deq(k_pages, k_scale, page)
+            v = deq(v_pages, v_scale, page)
+            pos = p * ps + jnp.arange(ps)[None, :]
+            valid = (pos < cache_len[bi]) & (page >= 0)
+            s = jnp.einsum("kgd,skd->kgs", qh, k,
+                           preferred_element_type=jnp.float32) * scale
+            s = jnp.where(valid, s.reshape(h, ps), -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            pexp = jnp.where(valid, jnp.exp(s - m_safe), 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            den = den * corr + jnp.sum(pexp, axis=1, keepdims=True)
+            pv = jnp.einsum("kgs,skd->kgd", pexp.reshape(kvh, g, ps), v,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr + pv.reshape(h, hd)
+            m = m_new
+        outs.append(acc / jnp.maximum(den, 1e-20))
+    return jnp.stack(outs).astype(q.dtype)
+
+
+def paged_chunk_attn_quant_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, k_scale: jax.Array,
+                               v_scale: jax.Array, page_idx: jax.Array,
+                               cache_len: jax.Array, new_lens: jax.Array,
+                               block_q: int = 0) -> jax.Array:
+    """Oracle for the quantized chunk-prefill kernel: identical (row,
+    q-block, page) walk to :func:`paged_chunk_attn_ref` with the kernel's
+    exact dequant op order."""
+    from .paged_chunk_attn import _pick_block_q
+
+    def deq(pages, scales, page):
+        i = jnp.clip(page, 0)
+        return pages[i].astype(jnp.float32) * scales[i][None, :, None]
+
+    b, s, h, hd = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    n_p = page_idx.shape[1]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    bq = block_q or _pick_block_q(s)
+    assert s % bq == 0, (s, bq)
+    outs = []
+    for bi in range(b):
+        rows = []
+        for qi in range(s // bq):
+            col = qi * bq + jnp.arange(bq)[:, None]            # (bq, 1)
+            q_pos = cache_len[bi] - s + col
+            valid_q = (col >= s - new_lens[bi]) & (q_pos >= 0)
+            qh = q[bi, qi * bq:(qi + 1) * bq].astype(
+                jnp.float32).reshape(bq, kvh, g, hd)
+            m = jnp.full((bq, h), -jnp.inf, jnp.float32)
+            den = jnp.zeros((bq, h), jnp.float32)
+            acc = jnp.zeros((bq, h, hd), jnp.float32)
+            for p in range(n_p):
+                page = page_idx[bi, p]
+                k = deq(k_pages, k_scale, page)
+                v = deq(v_pages, v_scale, page)
+                t_pos = p * ps + jnp.arange(ps)[None, :]       # (1, ps)
+                valid = (t_pos < cache_len[bi]) & (page >= 0) \
+                    & (t_pos <= q_pos) & valid_q
+                sc = jnp.einsum("qkgd,skd->qkgs", qh, k,
+                                preferred_element_type=jnp.float32) * scale
+                sc = jnp.where(valid[:, None, :],
+                               sc.reshape(bq, h, ps), -jnp.inf)
+                m_new = jnp.maximum(m, jnp.max(sc, axis=2))
+                m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+                pexp = jnp.where(valid[:, None, :],
+                                 jnp.exp(sc - m_safe[:, :, None]), 0.0)
+                corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+                den = den * corr + jnp.sum(pexp, axis=2)
+                pv = jnp.einsum("qkgs,skd->qkgd",
+                                pexp.reshape(bq, kvh, g, ps), v,
+                                preferred_element_type=jnp.float32)
+                acc = acc * corr[:, :, None] + pv.reshape(bq, h, hd)
+                m = m_new
+            rows.append(acc / jnp.maximum(den, 1e-20)[:, :, None])
+        outs.append(jnp.concatenate(rows, axis=0))
+    return jnp.stack(outs).astype(q.dtype)
+
+
 def paged_chunk_dense_ref(q: jax.Array, k_pages: jax.Array,
                           v_pages: jax.Array, page_idx: jax.Array,
                           cache_len: jax.Array,

@@ -415,15 +415,26 @@ def init_caches(cfg: ModelConfig, batch_size: int, max_seq: int,
 
 
 def init_paged_caches(cfg: ModelConfig, n_pages: int, page_size: int,
-                      dtype=jnp.bfloat16) -> Any:
+                      dtype=jnp.bfloat16, quantized: bool = False) -> Any:
     """Zero-initialized page STORE for the paged decode path: one pool of
     ``n_pages`` KV pages shared by every request, with a leading layer dim
     scanned like the dense caches.  The (request -> pages) map lives in
     ``serving.kv_pool.KVPool``; requests address the store through their
-    (B, P) page-index vectors."""
+    (B, P) page-index vectors.
+
+    ``quantized=True`` stores pages int8 with float32 per-(page, KV head)
+    scales (``kernels.quant`` layout) as sibling leaves ``k_scale`` /
+    ``v_scale`` of shape (n_layers, n_pages, KVH): the layer scan slices
+    them alongside the content, step donation covers them, and the
+    engine's COW page copy moves content + scale as one unit."""
     if cfg.family not in ("dense", "vlm"):
         raise ValueError(f"paged caches need dense attention "
                          f"(family={cfg.family})")
     kvh, hd = cfg.n_kv_heads, cfg.hd
     shape = (cfg.n_layers, n_pages, page_size, kvh, hd)
+    if quantized:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:2] + (kvh,), jnp.float32),
+                "v_scale": jnp.zeros(shape[:2] + (kvh,), jnp.float32)}
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

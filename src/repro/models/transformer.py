@@ -140,6 +140,59 @@ def _paged_chunk_attention(q, k_pages, v_pages, pages, cache_len, new_lens,
                                    new_lens)
 
 
+def _paged_attention_quant_sharded(q, k_pages, v_pages, k_scale, v_scale,
+                                   pages, cache_len, mesh, data_axes):
+    """Quantized-pool decode attention, sharded like
+    :func:`_paged_attention_sharded`; the per-page scales replicate with
+    the page store (they are pool metadata)."""
+    b = q.shape[0]
+    if mesh is not None and not getattr(mesh, "empty", False):
+        bax = tuple(a for a in data_axes if a in mesh.axis_names)
+        nb = 1
+        for a in bax:
+            nb *= mesh.shape[a]
+        if nb > 1 and b % nb == 0:
+            def body(q_, pg_, cl_, kp_, vp_, ks_, vs_):
+                return K.paged_attention_quant(q_, kp_, vp_, ks_, vs_,
+                                               pg_, cl_)
+
+            return shard_map_compat(
+                body, mesh=mesh,
+                in_specs=(P(bax), P(bax), P(bax), P(), P(), P(), P()),
+                out_specs=P(bax), check_vma=False)(
+                    q, pages, cache_len, k_pages, v_pages, k_scale, v_scale)
+    return K.paged_attention_quant(q, k_pages, v_pages, k_scale, v_scale,
+                                   pages, cache_len)
+
+
+def _paged_chunk_attention_quant(q, k_pages, v_pages, k_scale, v_scale,
+                                 pages, cache_len, new_lens, mesh,
+                                 data_axes):
+    """Quantized-pool chunk-prefill attention, sharded like
+    :func:`_paged_chunk_attention`; scales replicate with the store."""
+    b = q.shape[0]
+    if mesh is not None and not getattr(mesh, "empty", False):
+        bax = tuple(a for a in data_axes if a in mesh.axis_names)
+        nb = 1
+        for a in bax:
+            nb *= mesh.shape[a]
+        if nb > 1 and b % nb == 0:
+            def body(q_, pg_, cl_, nl_, kp_, vp_, ks_, vs_):
+                return K.paged_chunk_attention_quant(q_, kp_, vp_, ks_, vs_,
+                                                     pg_, cl_, nl_)
+
+            return shard_map_compat(
+                body, mesh=mesh,
+                in_specs=(P(bax), P(bax), P(bax), P(bax), P(), P(), P(),
+                          P()),
+                out_specs=P(bax), check_vma=False)(
+                    q, pages, cache_len, new_lens, k_pages, v_pages,
+                    k_scale, v_scale)
+    return K.paged_chunk_attention_quant(q, k_pages, v_pages, k_scale,
+                                         v_scale, pages, cache_len,
+                                         new_lens)
+
+
 def attn_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
                  positions: jax.Array,
                  cache: Optional[Dict[str, jax.Array]] = None,
@@ -159,7 +212,11 @@ def attn_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
     chunk's K/V are scattered into the pages in place and attention reads
     by page index — S == 1 through the streaming Pallas kernel, S > 1
     (chunked prefill, right-aligned with ``new_lens`` valid trailing
-    tokens per row) through the gather-dense chunk path."""
+    tokens per row) through the gather-dense chunk path.  A store that
+    also carries ``k_scale``/``v_scale`` leaves is the QUANTIZED pool
+    (int8 pages + per-(page, KV head) float32 scales, ``kernels.quant``):
+    writes go through ``requant_scatter`` and attention through the
+    in-kernel-dequant kernel variants."""
     B, S, d = x.shape
     h = rms_norm(x, p["ln"], cfg.norm_eps)
     q = (h @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
@@ -169,7 +226,27 @@ def attn_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
 
-    if pages is not None:
+    if pages is not None and "k_scale" in cache:
+        # quantized page store (``kernels.quant`` layout): merge the
+        # chunk's K/V into the touched pages via dequant -> scatter ->
+        # requant (shared prefix pages sit below the touched window and
+        # are never rewritten — the COW contract at byte level), then
+        # attend through the in-kernel-dequant variants
+        from ..kernels.quant import requant_scatter
+        kc, vc, ksc, vsc = requant_scatter(
+            cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
+            k, v, pages, cache_len, new_lens)
+        if S == 1 and new_lens is None:
+            o = _paged_attention_quant_sharded(
+                q[:, 0], kc, vc, ksc, vsc, pages, cache_len,
+                mesh, data_axes)[:, None]
+        else:
+            nl = new_lens if new_lens is not None \
+                else jnp.full((B,), S, jnp.int32)
+            o = _paged_chunk_attention_quant(q, kc, vc, ksc, vsc, pages,
+                                             cache_len, nl, mesh, data_axes)
+        new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+    elif pages is not None:
         # paged data plane: scatter the chunk's K/V into the shared page
         # store, then attend by page index — the dense (B, S, KVH, hd)
         # cache never materializes on the decode path

@@ -39,7 +39,7 @@ _REQUIRED = {"name", "ph", "ts", "pid", "tid"}
 
 #: (cat, name) instants exported as Perfetto counter tracks (``C``
 #: phase): each numeric arg becomes one series under the event name.
-COUNTER_EVENTS = {("sched", "ctrl_state")}
+COUNTER_EVENTS = {("sched", "ctrl_state"), ("pool", "hbm_bytes")}
 
 
 def to_chrome(events: List[TraceEvent], pid: int = 1) -> Dict[str, Any]:

@@ -67,6 +67,7 @@ from ..core.factory import LockEnv
 from ..core.registry import BravoRegistry, RegistryHandle
 from ..models import model as M
 from ..models.common import ModelConfig
+from ..kernels.quant import quant_layout_tag
 from ..obs import TRACER as _TR
 from ..obs.metrics import MetricsRegistry
 from .kv_pool import KVPool, page_keys
@@ -445,7 +446,8 @@ class ServingEngine:
                  n_pages: int = 4096, env: Optional[LockEnv] = None,
                  device_leases: bool = True, kv_stripes: int = 4,
                  scheduler: Optional[SchedulerConfig] = None,
-                 engine_cfg: Optional[EngineConfig] = None):
+                 engine_cfg: Optional[EngineConfig] = None,
+                 quant_kv: bool = False):
         self.cfg = cfg
         self.ecfg = engine_cfg or EngineConfig()
         self.mesh = mesh
@@ -500,8 +502,35 @@ class ServingEngine:
                                  "(the paged pool IS the data plane)")
             sc = scheduler
             self.scheduler = Scheduler(sc, n_pages)
-            # the page STORE (contents); the pool above holds the MAP
-            self._pages_kv = M.init_paged_caches(cfg, n_pages, sc.page_size)
+            # the page STORE (contents); the pool above holds the MAP.
+            # quant_kv=True stores pages int8 + per-(page, head) scales as
+            # sibling leaves — every pool program below (scan, donation,
+            # COW page copy) treats the store as an opaque pytree, so the
+            # quantized layout rides through unchanged
+            self.quant_kv = quant_kv
+            self._pages_kv = M.init_paged_caches(cfg, n_pages, sc.page_size,
+                                                 quantized=quant_kv)
+            # quantized pages hash/dedup by their int8 bytes: the prefix
+            # keys carry a layout tag so a quantized page key can never
+            # alias a bf16 one (tag 0 keeps legacy chains bit-identical)
+            self._quant_tag = (quant_layout_tag(sc.page_size,
+                                                cfg.n_kv_heads, cfg.hd)
+                               if quant_kv else 0)
+            # pool HBM footprint: the whole point of the int8 store is the
+            # byte bill, so it is a first-class gauge (+ Perfetto counter
+            # track).  The store's shape is fixed for the engine's
+            # lifetime, so one set at init is exact
+            hbm = sum(int(x.nbytes) for x in jax.tree.leaves(self._pages_kv))
+            self._g_hbm = self.metrics.gauge("pool.hbm_bytes")
+            self._g_hbm.set(hbm)
+            if _TR.enabled:
+                _TR.emit("pool", "hbm_bytes", bytes=hbm,
+                         quantized=int(quant_kv))
+            # quant write/hit volume: O(1) increments from host-known tick
+            # shapes, applied at tick top level AFTER the lease windows
+            # close — never a device read inside a lease
+            self._c_quant_tok = self.metrics.counter("pool.quant_tokens")
+            self._c_quant_hit = self.metrics.counter("pool.quant_hits")
             ms, lanes = sc.max_slots, sc.lanes
             # device-resident batch state: touched only on control-plane
             # events (admission / growth / eviction); the decode tick
@@ -737,7 +766,8 @@ class ServingEngine:
         #                               no device round-trip per tick while
         #                               the slot waits at the watermark
         if st.keys is None:
-            st.keys = page_keys(st.prefix, sc.page_size, pad_to=sc.lanes)
+            st.keys = page_keys(st.prefix, sc.page_size, pad_to=sc.lanes,
+                                quant_tag=self._quant_tag)
         _, n_run, free_hit = self.pages.match_prefix(*st.keys)
         lens = st.keys[2]
         # usable coverage: the hit run's tokens, capped so the LAST prompt
@@ -813,6 +843,8 @@ class ServingEngine:
         self.stats.inc("pages_saved", k_ref)
         self.stats.inc("cow_copies", int(cow))
         self.stats.inc("cached_tokens", cov)
+        if self.quant_kv and cov:
+            self._c_quant_hit.add(cov)   # tokens ridden as shared int8
         if _TR.enabled:
             _TR.emit("req", "admit", rid=st.rid, cached=cov,
                      pages=len(pages), shared=k_ref)
@@ -923,6 +955,8 @@ class ServingEngine:
         self.stats.inc("prefills")
         self.stats.inc("read_acquires")
         self.stats.inc("tokens_out", first_toks)
+        if self.quant_kv:
+            self._c_quant_tok.add(int(np.sum(newls)))
 
     def _run_decode(self, plan) -> None:
         """One decode tick over every DECODE row: grow pages first (with
@@ -969,6 +1003,8 @@ class ServingEngine:
         self.stats.inc("decode_steps")
         self.stats.inc("read_acquires")
         self.stats.inc("tokens_out", len(slots))
+        if self.quant_kv:
+            self._c_quant_tok.add(len(slots))
 
     def _ctrl_tick(self) -> None:
         """Latency-feedback admission update (paced to the controller's

@@ -39,14 +39,22 @@ in a second table:
                         so "evicting" cache is just allocating the page
     ``owner[p] <= -2``  shared, refcount ``-1 - owner[p]``
 
-The prefix index is a direct-mapped device hash map (``map_slots`` power-
-of-two slots): per slot the full 64-bit chained splitmix64 key (two int32
-limbs, hashed by :func:`page_keys` via ``kernels.hash`` — the same
-finalizer the lease table uses), the page it describes, and the number of
-valid tokens in that page (``page_size`` for full pages, less for the one
-partial-tail entry a prompt may publish).  Lookup, ref-acquisition, insert
-and ref-release are donated in-graph programs; nothing about the cached
-prefix set crosses the host boundary except the per-admission decision.
+The prefix index is a set-associative device hash map (``map_slots``
+power-of-two slots grouped into ``min(4, map_slots)``-way sets — PR 9
+measured a 0.47 collision rate on the Zipf trace for the direct-mapped
+original, i.e. nearly half of would-be hits silently missed): per slot
+the full 64-bit chained splitmix64 key (two int32 limbs, hashed by
+:func:`page_keys` via ``kernels.hash`` — the same finalizer the lease
+table uses), the page it describes, the number of valid tokens in that
+page (``page_size`` for full pages, less for the one partial-tail entry
+a prompt may publish), and an insert-time age stamp.  A lookup probes
+every way of its key's set; an insert takes the first vacant way or
+evicts the OLDEST entry when the set is full (eviction drops only the
+map entry — the victim page's owner/refcount state is untouched, so a
+shared victim keeps serving its existing holders).  Lookup,
+ref-acquisition, insert and ref-release are donated in-graph programs;
+nothing about the cached prefix set crosses the host boundary except the
+per-admission decision.
 
 Invariants the programs maintain:
 
@@ -132,8 +140,9 @@ def _refcount(owner):
     return jnp.maximum(-1 - owner, 0)
 
 
-def page_keys(tokens: np.ndarray, page_size: int,
-              pad_to: int = 0) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+def page_keys(tokens: np.ndarray, page_size: int, pad_to: int = 0,
+              quant_tag: int = 0) -> Tuple[np.ndarray, np.ndarray,
+                                           np.ndarray]:
     """Chained splitmix64 prefix keys for a prompt.
 
     ``keys[i]`` hashes tokens ``[0, (i+1) * page_size)`` — the whole
@@ -143,10 +152,19 @@ def page_keys(tokens: np.ndarray, page_size: int,
     limb vectors plus per-key valid-token counts (``page_size`` for full
     pages, the tail remainder for the tail key, 0 for padding), padded to
     ``pad_to`` entries so the in-graph programs compile once per geometry.
-    """
+
+    ``quant_tag`` (``kernels.quant.quant_layout_tag``) is mixed into the
+    chain seed when nonzero: a quantized engine's keys describe int8
+    bytes under a specific page geometry, so they must never alias an
+    entry minted for a different byte layout.  Page bytes are a
+    deterministic function of the token prefix GIVEN the layout (the
+    quantizer is deterministic and a full page's requant round trip is
+    bit-stable), so tagging the chain keeps dedup/COW bit-exact on the
+    quantized bytes.  0 (the default, and the unquantized engines' value)
+    leaves the legacy chain unchanged."""
     toks = [int(t) for t in np.asarray(tokens)]
     n = len(toks)
-    state = PREFIX_SEED
+    state = _mix(PREFIX_SEED, quant_tag) if quant_tag else PREFIX_SEED
     keys: List[int] = []
     lens: List[int] = []
     for i, t in enumerate(toks):
@@ -173,7 +191,7 @@ def page_keys(tokens: np.ndarray, page_size: int,
 # ---------------------------------------------------------------------------
 
 
-def _alloc_impl(owner, map_pg, rid, n):
+def _alloc_impl(owner, map_pg, scale_gen, rid, n):
     """``n`` is a TRACED scalar: request sizes vary per prompt, and a
     static n would recompile this program for every distinct page count on
     the serving path.  The taken-pages result is a mask (static shape); the
@@ -183,7 +201,12 @@ def _alloc_impl(owner, map_pg, rid, n):
     Cache-aware first fit: free pages WITHOUT a prefix entry are taken
     first, cached-free pages only when the plain ones run out — and taking
     a cached page evicts its entry (the content is about to be
-    overwritten), which keeps the hit-can-trust-content invariant."""
+    overwritten), which keeps the hit-can-trust-content invariant.
+
+    ``scale_gen`` is the per-page scale-metadata epoch (quantized pools):
+    bumping it for every taken page marks any previously derived scale
+    stale, so "a reallocated page always gets a fresh scale" is an
+    observable transition, not just a write-path convention."""
     n_pages = owner.shape[0]
     free = owner == FREE
     cached = jnp.zeros((n_pages,), bool).at[
@@ -196,7 +219,8 @@ def _alloc_impl(owner, map_pg, rid, n):
     take = free & (rank <= n) & enough
     new_owner = jnp.where(take, rid, owner)
     stale = (map_pg >= 0) & take[jnp.clip(map_pg, 0)]
-    return new_owner, jnp.where(stale, -1, map_pg), take, enough
+    return (new_owner, jnp.where(stale, -1, map_pg),
+            scale_gen + take.astype(jnp.int32), take, enough)
 
 
 def _reclaim_impl(owner, rid):
@@ -222,40 +246,46 @@ def _stripe_lanes_impl(stripe_idx, rids, *, stripes: int):
     return stripe_idx[rids % stripes]
 
 
-def _match_impl(owner, map_kh, map_kl, map_pg, map_ln, kh, kl, ln):
-    """Prefix lookup: per-key hit against the direct-mapped index, reduced
+def _match_impl(owner, map_kh, map_kl, map_pg, map_ln, kh, kl, ln, *,
+                ways: int):
+    """Prefix lookup: per-key probe of every way in the key's set, reduced
     to the longest PREFIX run (a hole in the chain — some page evicted —
     invalidates everything after it: chunked prefill can only skip a
     contiguous prefix).  -> (per-key page or -1, run length, per-key
     currently-refcount-0 flags — acquiring such a hit consumes a free
     page, and the caller charges admission only for the keys it will
-    actually take, and the lookup's COLLISION count: slots occupied by
-    a DIFFERENT key, i.e. direct-mapped conflicts where this lookup
-    could not even have hit — the baseline metric for the planned
-    set-associative index rework)."""
-    slot = kl & (map_pg.shape[0] - 1)
-    pg = map_pg[slot]
-    occupied = pg >= 0
-    key_eq = (map_kh[slot] == kh) & (map_kl[slot] == kl) \
-        & (map_ln[slot] == ln)
-    hit = occupied & key_eq & (ln > 0)
+    actually take, and the lookup's COLLISION count: keys whose set is
+    FULL of other keys' entries, i.e. set conflicts where this lookup
+    could not even have hit — with a vacant way a no-match is a genuine
+    miss, not a conflict)."""
+    n_sets = map_pg.shape[0] // ways
+    m = kh.shape[0]
+    slots = (kl & (n_sets - 1))[:, None] * ways \
+        + jnp.arange(ways)[None, :]                      # (m, ways)
+    pg_w = map_pg[slots]
+    occ = pg_w >= 0
+    key_eq = (map_kh[slots] == kh[:, None]) \
+        & (map_kl[slots] == kl[:, None]) & (map_ln[slots] == ln[:, None])
+    hit_w = occ & key_eq & (ln[:, None] > 0)
+    hit = jnp.any(hit_w, axis=1)
+    pg = jnp.where(hit, pg_w[jnp.arange(m), jnp.argmax(hit_w, axis=1)], -1)
     run = jnp.cumprod(hit.astype(jnp.int32)) > 0
     pages = jnp.where(run, pg, -1)
     free_hit = run & (owner[jnp.clip(pg, 0)] == FREE)
-    coll = occupied & ~key_eq & (ln > 0)
+    coll = (ln > 0) & ~hit & jnp.all(occ & ~key_eq, axis=1)
     return (pages, jnp.sum(run.astype(jnp.int32)), free_hit,
             jnp.sum(coll.astype(jnp.int32)))
 
 
 def _acquire_prefix_impl(owner, map_kh, map_kl, map_pg, map_ln,
-                         kh, kl, ln, take):
+                         kh, kl, ln, take, *, ways: int):
     """Ref-acquisition half of a prefix hit: re-derive the hit run in the
     same program (so the refs land exactly on what was matched) and bump
     the refcount of every hit the caller's ``take`` mask selects.  Returns
     the taken pages (-1 elsewhere) and how many came off the free list."""
     n_pages = owner.shape[0]
     pages, _, _, _ = _match_impl(owner, map_kh, map_kl, map_pg, map_ln,
-                                 kh, kl, ln)
+                                 kh, kl, ln, ways=ways)
     use = (pages >= 0) & take
     tgt = jnp.where(use, pages, n_pages)
     revived = jnp.sum((use & (owner[jnp.clip(pages, 0)] == FREE))
@@ -264,33 +294,48 @@ def _acquire_prefix_impl(owner, map_kh, map_kl, map_pg, map_ln,
     return new_owner, jnp.where(use, pages, -1), revived
 
 
-def _insert_prefix_impl(owner, map_kh, map_kl, map_pg, map_ln,
-                        kh, kl, ln, lane_pg, rid):
+def _insert_prefix_impl(owner, map_kh, map_kl, map_pg, map_ln, map_age,
+                        kh, kl, ln, lane_pg, rid, stamp, *, ways: int):
     """Publish a request's freshly written prompt pages into the index:
     key ``i`` maps to the request's page ``lane_pg[i]``, which converts
     from private to shared-refcount-1 (the inserter's own ref — its reads
-    must outlive any later hit).  Occupied slots are left alone (the older
-    entry keeps serving hits); among same-slot candidates in one batch the
-    first wins, like the publish kernel's CAS ordering."""
+    must outlive any later hit).  Way choice per key: a key already
+    present in its set is skipped (the older entry keeps serving hits);
+    otherwise the first VACANT way, or — set full — the way with the
+    OLDEST ``map_age`` stamp is evicted (entry only; the victim page's
+    owner/refcount state is untouched).  Among same-set candidates in one
+    batch the first wins, like the publish kernel's CAS ordering.
+    ``stamp`` is the pool's monotonic insert clock (traced scalar)."""
     n_pages = owner.shape[0]
     map_slots = map_pg.shape[0]
-    slot = kl & (map_slots - 1)
+    n_sets = map_slots // ways
+    set_i = kl & (n_sets - 1)
     m = kh.shape[0]
     idx = jnp.arange(m)
     valid = (ln > 0) & (lane_pg >= 0) \
         & (owner[jnp.clip(lane_pg, 0)] == rid)
-    dup_earlier = (slot[None, :] == slot[:, None]) \
+    dup_earlier = (set_i[None, :] == set_i[:, None]) \
         & (idx[None, :] < idx[:, None]) & valid[None, :]
     first = ~jnp.any(dup_earlier, axis=1)
-    ins = valid & first & (map_pg[slot] < 0)
-    tgt_slot = jnp.where(ins, slot, map_slots)
+    slots = set_i[:, None] * ways + jnp.arange(ways)[None, :]   # (m, ways)
+    occ = map_pg[slots] >= 0
+    key_eq = (map_kh[slots] == kh[:, None]) \
+        & (map_kl[slots] == kl[:, None]) & (map_ln[slots] == ln[:, None])
+    present = jnp.any(occ & key_eq, axis=1)
+    vac = ~occ
+    age_w = jnp.where(occ, map_age[slots], jnp.iinfo(jnp.int32).max)
+    way = jnp.where(jnp.any(vac, axis=1), jnp.argmax(vac, axis=1),
+                    jnp.argmin(age_w, axis=1))
+    ins = valid & first & ~present
+    tgt_slot = jnp.where(ins, set_i * ways + way, map_slots)
     new_kh = map_kh.at[tgt_slot].set(kh, mode="drop")
     new_kl = map_kl.at[tgt_slot].set(kl, mode="drop")
     new_pg = map_pg.at[tgt_slot].set(lane_pg, mode="drop")
     new_ln = map_ln.at[tgt_slot].set(ln, mode="drop")
+    new_age = map_age.at[tgt_slot].set(stamp, mode="drop")
     tgt_pg = jnp.where(ins, lane_pg, n_pages)
     new_owner = owner.at[tgt_pg].set(-2, mode="drop")   # refcount 1
-    return new_owner, new_kh, new_kl, new_pg, new_ln, ins
+    return new_owner, new_kh, new_kl, new_pg, new_ln, new_age, ins
 
 
 def _release_refs_impl(owner, pages):
@@ -347,15 +392,16 @@ def _fold_hits_impl(acc, pages):
 
 
 class _Programs(NamedTuple):
-    alloc: object           # donates owner + map_pg
+    alloc: object           # donates owner + map_pg + scale_gen
     reclaim: object
     mask: object
     mask_batch: object
     free_count: object
     stripe_lanes: object    # static stripes
-    match: object
-    acquire_prefix: object  # donates owner
-    insert_prefix: object   # donates owner + the four map vectors
+    match: object           # static ways
+    acquire_prefix: object  # donates owner; static ways
+    insert_prefix: object   # donates owner + the five map vectors;
+    #                         static ways
     release_refs: object    # donates owner
     orphan_plan: object     # static stripes
     scrub: object
@@ -368,16 +414,18 @@ def _programs() -> _Programs:
     from ..kernels.ops import jit_donating
 
     return _Programs(
-        alloc=jit_donating(_alloc_impl, 2),
+        alloc=jit_donating(_alloc_impl, 3),
         reclaim=jit_donating(_reclaim_impl, 1),
         mask=jax.jit(_mask_impl),
         mask_batch=jax.jit(_mask_batch_impl),
         free_count=jax.jit(_free_count_impl),
         stripe_lanes=jax.jit(_stripe_lanes_impl,
                              static_argnames=("stripes",)),
-        match=jax.jit(_match_impl),
-        acquire_prefix=jit_donating(_acquire_prefix_impl, 1),
-        insert_prefix=jit_donating(_insert_prefix_impl, 5),
+        match=jax.jit(_match_impl, static_argnames=("ways",)),
+        acquire_prefix=jit_donating(_acquire_prefix_impl, 1,
+                                    static_argnames=("ways",)),
+        insert_prefix=jit_donating(_insert_prefix_impl, 6,
+                                   static_argnames=("ways",)),
         release_refs=jit_donating(_release_refs_impl, 1),
         orphan_plan=jax.jit(_orphan_plan_impl,
                             static_argnames=("stripes",)),
@@ -393,8 +441,8 @@ class KVPool:
     one registry whose table also serves the model-epoch lock — the paper's
     one-table-per-address-space economy); a private one is built if
     omitted.  ``map_slots`` sizes the prefix index (power of two; default
-    2x the page count rounded up — a tiny value forces slot collisions,
-    which the property tests exploit)."""
+    4x the page count rounded up, one 4-way set per page — a tiny value
+    forces slot collisions, which the property tests exploit)."""
 
     def __init__(self, n_pages: int, registry: Optional[BravoRegistry] = None,
                  stripes: int = 4, map_slots: int = 0,
@@ -411,18 +459,33 @@ class KVPool:
         self._stripe_idx = jnp.asarray([h.idx for h in self.locks], jnp.int32)
         self.owner = jnp.full((n_pages,), FREE, jnp.int32)
         if map_slots <= 0:
+            # 4x the page count: at 4-way associativity that's one SET per
+            # page, which holds the BENCH_slo Zipf trace's full-set
+            # conflict rate under 0.05 (2x measured 0.12 — sets saturate
+            # over a long trace because evicted requests leave their tail
+            # entries cached).  Map metadata is five int32 vectors, so the
+            # larger index costs 20 bytes per slot against a multi-KiB page.
             map_slots = 1
-            while map_slots < 2 * n_pages:
+            while map_slots < 4 * n_pages:
                 map_slots *= 2
         if map_slots & (map_slots - 1) != 0:
             raise ProtocolError(
                 f"map_slots {map_slots} must be a power of two (the "
                 f"prefix index masks hashes with map_slots - 1)")
         self.map_slots = map_slots
+        # set-associativity: 4-way (or map_slots-way below 4 slots — a
+        # 1-slot map degenerates to direct-mapped, which the forced-
+        # collision property tests rely on)
+        self.ways = min(4, map_slots)
         self._map_kh = jnp.zeros((map_slots,), jnp.int32)
         self._map_kl = jnp.zeros((map_slots,), jnp.int32)
         self._map_pg = jnp.full((map_slots,), -1, jnp.int32)
         self._map_ln = jnp.zeros((map_slots,), jnp.int32)
+        self._map_age = jnp.zeros((map_slots,), jnp.int32)
+        self._age_clock = 0           # monotonic insert stamp (host int)
+        # per-page scale-metadata epoch (quantized pools): bumped when a
+        # page is (re)allocated, so a stale scale is an observable state
+        self.scale_gen = jnp.zeros((n_pages,), jnp.int32)
         self._mu = threading.Lock()   # guards the owner/map buffer swaps
         # bumped by every owner/map mutation: lets the engine cache a
         # slot's admission peek instead of re-syncing a device match on
@@ -549,11 +612,12 @@ class KVPool:
         free page evicts its prefix entry in the same program."""
         self._stripe(rid).revoke(**revoke_kw)
         with self._mu:
-            owner, map_pg, take, ok = _programs().alloc(
-                self.owner, self._map_pg, jnp.asarray(rid, jnp.int32),
-                jnp.asarray(n, jnp.int32))
+            owner, map_pg, scale_gen, take, ok = _programs().alloc(
+                self.owner, self._map_pg, self.scale_gen,
+                jnp.asarray(rid, jnp.int32), jnp.asarray(n, jnp.int32))
             self.owner = owner
             self._map_pg = map_pg
+            self.scale_gen = scale_gen
             self._c_allocates.add(1)
             self.version += 1
         if _TR.enabled:
@@ -603,14 +667,14 @@ class KVPool:
             pages, n_run, free_hit, n_coll = _programs().match(
                 self.owner, self._map_kh, self._map_kl, self._map_pg,
                 self._map_ln, jnp.asarray(kh), jnp.asarray(kl),
-                jnp.asarray(ln))
+                jnp.asarray(ln), ways=self.ways)
             self._c_prefix_lookups.add(1)
         n = int(n_run)                # sync OUTSIDE the mutex: a writer's
         if n > 0:                     # dispatch must never queue behind a
             self._c_prefix_hits.add(1)  # reader's host round-trip
-        c = int(n_coll)               # direct-mapped conflicts: would-be
-        if c > 0:                     # hits turned into misses (PR-9
-            self._c_prefix_collisions.add(c)  # set-assoc baseline)
+        c = int(n_coll)               # full-set conflicts: would-be hits
+        if c > 0:                     # turned into misses (PR-9 measured
+            self._c_prefix_collisions.add(c)  # 0.47 direct-mapped)
         if _TR.enabled:
             _TR.emit("pool", "dedup_hit" if n > 0 else "dedup_miss", run=n,
                      collisions=c)
@@ -626,7 +690,7 @@ class KVPool:
             owner, pages, revived = _programs().acquire_prefix(
                 self.owner, self._map_kh, self._map_kl, self._map_pg,
                 self._map_ln, jnp.asarray(kh), jnp.asarray(kl),
-                jnp.asarray(ln), jnp.asarray(take))
+                jnp.asarray(ln), jnp.asarray(take), ways=self.ways)
             self.owner = owner
             self.version += 1
             if _TR.enabled:
@@ -652,14 +716,19 @@ class KVPool:
         to shared-refcount-1 where the map slot is free.  Returns the
         converted mask (device)."""
         with self._mu:
-            (owner, mkh, mkl, mpg, mln, ins) = _programs().insert_prefix(
-                self.owner, self._map_kh, self._map_kl, self._map_pg,
-                self._map_ln, jnp.asarray(kh), jnp.asarray(kl),
-                jnp.asarray(ln), jnp.asarray(lane_pages),
-                jnp.asarray(rid, jnp.int32))
+            self._age_clock += 1
+            (owner, mkh, mkl, mpg, mln, mage, ins) = \
+                _programs().insert_prefix(
+                    self.owner, self._map_kh, self._map_kl, self._map_pg,
+                    self._map_ln, self._map_age, jnp.asarray(kh),
+                    jnp.asarray(kl), jnp.asarray(ln),
+                    jnp.asarray(lane_pages), jnp.asarray(rid, jnp.int32),
+                    jnp.asarray(self._age_clock, jnp.int32),
+                    ways=self.ways)
             self.owner = owner
             self._map_kh, self._map_kl = mkh, mkl
             self._map_pg, self._map_ln = mpg, mln
+            self._map_age = mage
             self._c_prefix_inserts.add(1)
             self.version += 1
         if _TR.enabled:
@@ -735,6 +804,7 @@ class KVPool:
                 "allocates": self.allocates, "reclaims": self.reclaims,
                 "shared_pages": shared, "refcount_total": refs,
                 "cached_entries": entries, "map_slots": self.map_slots,
+                "map_ways": self.ways,
                 "prefix_lookups": self.prefix_lookups,
                 "prefix_hits": self.prefix_hits,
                 "prefix_inserts": self.prefix_inserts,

@@ -10,7 +10,7 @@ jax = pytest.importorskip("jax")
 from repro.analysis import lint_hlo as LH  # noqa: E402
 
 STEP_NAMES = ["prefill", "decode", "decode_paged", "prefill_paged",
-              "copy_page"]
+              "decode_paged_quant", "prefill_paged_quant", "copy_page"]
 
 
 @pytest.fixture(scope="module")
@@ -33,7 +33,9 @@ def test_step_has_zero_transfers(steps, name):
     assert LH.find_transfers(steps[name]["compiled"], name) == []
 
 
-@pytest.mark.parametrize("name", ["decode_paged", "prefill_paged"])
+@pytest.mark.parametrize("name", ["decode_paged", "prefill_paged",
+                                  "decode_paged_quant",
+                                  "prefill_paged_quant"])
 def test_paged_steps_forbid_dense_kv(steps, name):
     # the forbidden shape is real: it's the dense gather the paged
     # kernels replace, so it must be declared...
@@ -44,10 +46,22 @@ def test_paged_steps_forbid_dense_kv(steps, name):
 
 
 @pytest.mark.parametrize("name", ["decode_paged", "prefill_paged",
-                                  "copy_page"])
+                                  "decode_paged_quant",
+                                  "prefill_paged_quant", "copy_page"])
 def test_donating_steps_alias(steps, name):
     assert steps[name]["require_donation"]
     assert LH.has_donation(steps[name]["lowered"])
+
+
+@pytest.mark.parametrize("name", ["decode_paged_quant",
+                                  "prefill_paged_quant"])
+def test_quant_steps_forbid_fp32_pool(steps, name):
+    # the quantized steps declare the fp32 twin of the int8 page store
+    # (and its stacked all-layers form) as forbidden...
+    assert steps[name]["forbid_fp32_shapes"]
+    # ...and the lowering holds neither
+    for dims in steps[name]["forbid_fp32_shapes"]:
+        assert not LH.find_shape(steps[name]["lowered"], dims, dtype="f32")
 
 
 def test_dense_reference_would_fail_the_lint():
@@ -70,3 +84,19 @@ def test_dense_reference_would_fail_the_lint():
     fs = LH.lint_step("dense_ref", lowered,
                       forbid_shapes=[(b, lanes * ps, kvh, hd)])
     assert [f.rule for f in fs] == ["dense-kv-materialization"]
+
+
+def test_fp32_materialization_rule_has_teeth():
+    """Dequantizing the whole pool up front DOES build the fp32 twin of
+    the int8 page store — proves the fp32-page rule catches exactly the
+    shortcut the quant kernels exist to avoid."""
+    import jax.numpy as jnp
+    from repro.kernels import quant as Q
+
+    n_pages, ps, kvh, hd = 16, 8, 2, 16
+    kq = jnp.zeros((n_pages, ps, kvh, hd), jnp.int8)
+    ks = jnp.ones((n_pages, kvh), jnp.float32)
+    lowered = jax.jit(Q.dequantize_pages).lower(kq, ks).as_text()
+    fs = LH.lint_step("deq_all", lowered,
+                      forbid_fp32_shapes=[(n_pages, ps, kvh, hd)])
+    assert [f.rule for f in fs] == ["fp32-page-materialization"]

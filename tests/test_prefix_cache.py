@@ -114,14 +114,20 @@ except ImportError:                                       # pragma: no cover
 
 
 class HostModel:
-    """Pure-python mirror of the pool's owner encoding + direct-mapped
-    prefix index; the sweep checks the device state against it after
-    every operation."""
+    """Pure-python mirror of the pool's owner encoding + set-associative
+    prefix index (min(4, map_slots)-way sets, oldest-entry eviction when a
+    set is full — same tie-breaking as the device program: lowest way
+    among vacants / among minimal ages); the sweep checks the device
+    state against it after every operation."""
 
     def __init__(self, n_pages, map_slots):
         self.owner = np.full(n_pages, FREE, np.int64)
-        self.map = {}          # slot -> (kh, kl, ln, page)
+        self.map = {}          # absolute slot -> (kh, kl, ln, page)
+        self.age = {}          # absolute slot -> insert stamp
         self.map_slots = map_slots
+        self.ways = min(4, map_slots)
+        self.n_sets = map_slots // self.ways
+        self.clock = 0
 
     def cached(self):
         return {p for (_, _, _, p) in self.map.values()}
@@ -144,14 +150,23 @@ class HostModel:
         self.owner[mine] = FREE
         return len(mine)
 
+    def _set_slots(self, kl):
+        set_i = int(kl) & (self.n_sets - 1)
+        return [set_i * self.ways + w for w in range(self.ways)]
+
     def match(self, kh, kl, ln):
         pages, run = [], True
         for i in range(len(kh)):
-            e = self.map.get(int(kl[i]) & (self.map_slots - 1))
-            hit = (ln[i] > 0 and e is not None and e[0] == kh[i]
-                   and e[1] == kl[i] and e[2] == ln[i])
-            run = run and hit
-            pages.append(e[3] if run else -1)
+            page = -1
+            if ln[i] > 0:
+                for s in self._set_slots(kl[i]):
+                    e = self.map.get(s)
+                    if (e is not None and e[0] == kh[i] and e[1] == kl[i]
+                            and e[2] == ln[i]):
+                        page = e[3]
+                        break
+            run = run and page >= 0
+            pages.append(page if run else -1)
         return pages, sum(p >= 0 for p in pages)
 
     def acquire(self, kh, kl, ln, take):
@@ -166,15 +181,27 @@ class HostModel:
         return out
 
     def insert(self, rid, kh, kl, ln, lane_pg):
+        self.clock += 1
         ins = []
+        seen_sets = set()
         for i in range(len(kh)):
-            slot = int(kl[i]) & (self.map_slots - 1)
-            ok = (ln[i] > 0 and lane_pg[i] >= 0
-                  and self.owner[lane_pg[i]] == rid
-                  and slot not in self.map)
+            slots = self._set_slots(kl[i])
+            valid = (ln[i] > 0 and lane_pg[i] >= 0
+                     and self.owner[lane_pg[i]] == rid)
+            first = slots[0] not in seen_sets
+            if valid:
+                seen_sets.add(slots[0])
+            present = any(
+                s in self.map and self.map[s][:3]
+                == (int(kh[i]), int(kl[i]), int(ln[i])) for s in slots)
+            ok = valid and first and not present
             if ok:
+                vac = [s for s in slots if s not in self.map]
+                slot = vac[0] if vac else min(
+                    slots, key=lambda s: (self.age[s], s))
                 self.map[slot] = (int(kh[i]), int(kl[i]), int(ln[i]),
                                   int(lane_pg[i]))
+                self.age[slot] = self.clock
                 self.owner[lane_pg[i]] = -2
             ins.append(ok)
         return ins
@@ -290,25 +317,34 @@ else:                                                     # pragma: no cover
         _run_prefix_sweep([_prompt(s, l) for s, l in specs], case)
 
 
-def test_forced_slot_collision_is_a_miss_not_corruption():
-    """Two different prefixes whose keys land in the same map slot: the
-    first keeps the slot, the second neither inserts nor matches — a
-    collision degrades dedup, never correctness."""
+def test_forced_set_conflict_evicts_oldest_never_corrupts():
+    """Two different prefixes whose keys land in the same (1-way) set:
+    the second insert evicts the older ENTRY by age — the victim page's
+    owner/refcount state is untouched (its sharers keep their refs; the
+    page just stops serving new hits), and neither key ever false-hits
+    the other's entry.  A set conflict degrades dedup, never
+    correctness."""
     ps = 4
     pool = KVPool(8, registry=BravoRegistry(slots=SLOTS), stripes=1,
-                  map_slots=1)             # EVERY key shares slot 0
+                  map_slots=1)             # 1-way: EVERY key shares set 0
     a = np.asarray([1, 2, 3, 4], np.int32)
     b = np.asarray([9, 8, 7, 6], np.int32)
     ka = page_keys(a, ps, pad_to=2)
     kb = page_keys(b, ps, pad_to=2)
     pa = pool.allocate(0, 1)
     assert pool.insert_prefix(0, *ka, np.asarray(pa + [-1], np.int32))[0]
+    assert pool.match_prefix(*ka)[1] == 1      # A served while cached
     pb = pool.allocate(1, 1)
-    assert not pool.insert_prefix(1, *kb,
-                                  np.asarray(pb + [-1], np.int32))[0]
-    assert pool.match_prefix(*kb)[1] == 0      # no false hit for B
-    assert pool.match_prefix(*ka)[1] == 1      # A still served
-    assert np.asarray(pool.owner)[pb[0]] == 1  # B's page stayed private
+    # B's insert finds the set full and evicts A's (older) entry
+    assert pool.insert_prefix(1, *kb, np.asarray(pb + [-1], np.int32))[0]
+    assert pool.match_prefix(*kb)[1] == 1      # B now served
+    assert pool.match_prefix(*ka)[1] == 0      # A misses; no false hit
+    assert pool.prefix_collisions >= 1         # ...and counts the conflict
+    # eviction dropped only the map entry: A's page keeps its inserter
+    # ref (shared, refcount 1) until A releases it
+    assert np.asarray(pool.owner)[pa[0]] == -2
+    assert pool.release_refs(np.asarray(pa, np.int32)) == 1
+    assert np.asarray(pool.owner)[pa[0]] == FREE
 
 
 # ---------------------------------------------------------------------------
